@@ -1,0 +1,76 @@
+"""Shared benchmark workloads: synthetic stand-ins for the paper's datasets
+(Table 2 statistics), the paper's random-walk query generator, timing
+helpers, and the method matrix (CEMR + ablated variants + the vectorized
+engine)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.graph import (DATASET_STATS, random_walk_query,
+                              synthetic_dataset)
+from repro.core.ref_engine import cemr_match
+from repro.core.engine import vector_match
+
+# CI-speed scale: |V| scaled down, structure preserved (power-law, labels).
+DEFAULT_SCALE = 0.03
+BENCH_DATASETS = ["yeast", "human", "hprd", "wordnet", "dblp"]
+
+
+def load_datasets(scale: float = DEFAULT_SCALE, names=None):
+    return {n: synthetic_dataset(n, scale=scale, seed=7)
+            for n in (names or BENCH_DATASETS)}
+
+
+def make_queries(data, sizes=(4, 6, 8), per_size=5, seed=0):
+    out = []
+    for n in sizes:
+        for i in range(per_size):
+            try:
+                out.append((n, random_walk_query(data, n, seed=seed + 31 * i
+                                                 + 997 * n)))
+            except RuntimeError:
+                continue
+    return out
+
+
+METHODS = {
+    # paper-faithful CEMR and its ablations (reference DFS engine)
+    "cemr": dict(encoding="cost", use_cer=True, use_cv=True, use_fs=True),
+    "basic": dict(encoding="all_black", use_cer=False, use_cv=False,
+                  use_fs=False),
+    "all_black": dict(encoding="all_black"),
+    "all_white": dict(encoding="all_white"),
+    "case12": dict(encoding="case12"),
+    "no_cer": dict(use_cer=False),
+    "no_cv": dict(use_cv=False),
+    "no_fs": dict(use_fs=False),
+    "no_prune": dict(use_cv=False, use_fs=False),
+}
+
+
+def run_method(method: str, query, data, *, limit=100_000, step_budget=None,
+               order_heuristic="cemr"):
+    if method == "vector":
+        # warm measurement: build plan + compile once, time the second run
+        # (per-plan jit churn is a shape-bucketing problem, not enumeration
+        # cost — see EXPERIMENTS.md §Perf[cemr-engine])
+        from repro.core.ref_engine import preprocess
+        from repro.core.engine import VectorEngine
+        cs, an = preprocess(query, data)
+        if any(c.shape[0] == 0 for c in cs.cand):
+            return 0, 0.0, vector_match(query, data, limit=1)
+        eng = VectorEngine(cs, an, tile_rows=2048)
+        eng.run(limit=limit)
+        t0 = time.perf_counter()
+        res = eng.run(limit=limit)
+        return res.count, time.perf_counter() - t0, res
+    kw = dict(METHODS[method])
+    kw.setdefault("order_heuristic", order_heuristic)
+    res = cemr_match(query, data, limit=limit, step_budget=step_budget, **kw)
+    return res.count, res.elapsed_s, res
+
+
+def bench_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,160 @@
+"""Benchmarks mirroring the paper's tables/figures (see DESIGN.md §8 for the
+index). Each function returns CSV rows `name,us_per_call,derived`."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from .common import (BENCH_DATASETS, bench_row, load_datasets, make_queries,
+                     run_method)
+
+
+def fig7_total_time(scale=0.03, limit=20_000):
+    """Fig 7: total query time per dataset, CEMR vs baselines (+vector)."""
+    rows = []
+    for name, data in load_datasets(scale).items():
+        queries = make_queries(data, sizes=(4, 6), per_size=3)
+        for method in ["cemr", "basic", "vector"]:
+            total, counts = 0.0, 0
+            for _, q in queries:
+                c, dt, _ = run_method(method, q, data, limit=limit)
+                total += dt
+                counts += c
+            rows.append(bench_row(f"fig7.{name}.{method}",
+                                  total / max(len(queries), 1),
+                                  f"emb={counts}"))
+    return rows
+
+
+def fig8a_query_size(scale=0.03, limit=20_000):
+    """Fig 8a: enumeration time vs query size."""
+    rows = []
+    data = load_datasets(scale, names=["yeast"])["yeast"]
+    for n in (4, 6, 8, 10):
+        queries = make_queries(data, sizes=(n,), per_size=3)
+        for method in ["cemr", "basic"]:
+            total = sum(run_method(method, q, data, limit=limit)[1]
+                        for _, q in queries)
+            rows.append(bench_row(f"fig8a.q{n}.{method}",
+                                  total / max(len(queries), 1)))
+    return rows
+
+
+def fig8b_limit(scale=0.05):
+    """Fig 8b: enumeration time vs result-count limit — CEM's batched leaves
+    should give CEMR a flatter growth curve than all-black."""
+    rows = []
+    data = load_datasets(scale, names=["yeast"])["yeast"]
+    queries = make_queries(data, sizes=(6,), per_size=3)
+    for limit in (10**2, 10**3, 10**4, 10**5):
+        for method in ["cemr", "all_black"]:
+            total = sum(run_method(method, q, data, limit=limit)[1]
+                        for _, q in queries)
+            rows.append(bench_row(f"fig8b.limit{limit}.{method}",
+                                  total / max(len(queries), 1)))
+    return rows
+
+
+def t3_unsolved(scale=0.05, step_budget=3_000):
+    """Table 3: queries unsolved within a (deterministic) step budget."""
+    rows = []
+    for name, data in load_datasets(scale, names=["human", "wordnet"]).items():
+        queries = make_queries(data, sizes=(8, 10), per_size=4)
+        for method in ["cemr", "basic"]:
+            unsolved = 0
+            for _, q in queries:
+                _, _, res = run_method(method, q, data, limit=10**9,
+                                       step_budget=step_budget)
+                unsolved += int(res.timed_out)
+            rows.append(bench_row(f"t3.{name}.{method}", 0.0,
+                                  f"unsolved={unsolved}/{len(queries)}"))
+    return rows
+
+
+def t4_memory(scale=0.03, limit=20_000):
+    """Table 4: peak intermediate memory (reference engine frontier bytes)."""
+    rows = []
+    for name, data in load_datasets(scale, names=["yeast", "human"]).items():
+        queries = make_queries(data, sizes=(6,), per_size=3)
+        for method in ["cemr", "all_black"]:
+            peak = 0
+            for _, q in queries:
+                _, _, res = run_method(method, q, data, limit=limit)
+                peak = max(peak, res.stats.peak_frontier_bytes)
+            rows.append(bench_row(f"t4.{name}.{method}", 0.0,
+                                  f"peak_bytes={peak}"))
+    return rows
+
+
+def fig10_ablations(which="all", scale=0.03, limit=20_000):
+    """Fig 10a-d: CEM encodings / CER / prunings / matching orders."""
+    rows = []
+    data_by = load_datasets(scale, names=["yeast", "human"])
+    groups = {
+        "cem": ["cemr", "all_black", "all_white", "case12"],
+        "cer": ["cemr", "no_cer"],
+        "prune": ["cemr", "no_cv", "no_fs", "no_prune"],
+    }
+    for gname, methods in groups.items():
+        if which not in ("all", gname):
+            continue
+        for dname, data in data_by.items():
+            queries = make_queries(data, sizes=(6, 8), per_size=3)
+            for method in methods:
+                total, inter = 0.0, 0
+                for _, q in queries:
+                    _, dt, res = run_method(method, q, data, limit=limit)
+                    total += dt
+                    inter += res.stats.intersections
+                rows.append(bench_row(
+                    f"fig10{gname}.{dname}.{method}",
+                    total / max(len(queries), 1), f"intersections={inter}"))
+    if which in ("all", "order"):
+        for dname, data in data_by.items():
+            queries = make_queries(data, sizes=(6,), per_size=3)
+            for heur in ["cemr", "ri", "gql"]:
+                total = sum(run_method("cemr", q, data, limit=limit,
+                                       order_heuristic=heur)[1]
+                            for _, q in queries)
+                rows.append(bench_row(f"fig10order.{dname}.{heur}",
+                                      total / max(len(queries), 1)))
+    return rows
+
+
+def fig11_lsqb(scales=(0.02, 0.04, 0.08), limit=50_000):
+    """Fig 11 analog: directed + edge-labeled multi-join queries across data
+    scales (LSQB is directed/edge-labeled; we synthesize that regime)."""
+    from repro.core.graph import synthetic_labeled_graph, random_walk_query
+    rows = []
+    for sc in scales:
+        n = max(200, int(40_000 * sc))
+        data = synthetic_labeled_graph(n, 8.0, 4, seed=3, directed=True,
+                                       n_edge_labels=3)
+        queries = [random_walk_query(data, s, seed=11 + s) for s in (4, 5, 6)]
+        for method in ["cemr", "basic"]:
+            total = sum(run_method(method, q, data, limit=limit)[1]
+                        for q in queries)
+            rows.append(bench_row(f"fig11.scale{sc}.{method}",
+                                  total / len(queries)))
+    return rows
+
+
+def fig14_eps(scale=0.05, limit=1_000_000):
+    """Fig 14: embeddings per second. Uses a result-dense workload (the
+    regime the paper's EPS plot emphasizes: CEM's batched leaves dominate
+    when result sets are large)."""
+    from repro.core.graph import synthetic_labeled_graph, random_walk_query
+    rows = []
+    data = synthetic_labeled_graph(3000, 10.0, 4, seed=0)
+    queries = [(7, random_walk_query(data, 7, seed=40 + s)) for s in range(3)]
+    for method in ["cemr", "all_black", "vector"]:
+        emb, total = 0, 0.0
+        for _, q in queries:
+            c, dt, _ = run_method(method, q, data, limit=limit)
+            emb += c
+            total += dt
+        eps = emb / total if total else 0.0
+        rows.append(bench_row(f"fig14.{method}", total / len(queries),
+                              f"eps={eps:.0f}"))
+    return rows

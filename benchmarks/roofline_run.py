@@ -1,0 +1,42 @@
+"""Render the §Roofline table from dry-run JSON dumps.
+
+  PYTHONPATH=src python -m benchmarks.roofline_run dryrun_single_pod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_table(path: str) -> str:
+    rows = json.load(open(path))
+    out = ["| arch | shape | chips | t_compute | t_memory | t_collective | "
+           "dominant | useful | mem/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | FAILED: "
+                       f"{r.get('error', '')[:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        arg = (mem.get("argument_size_in_bytes") or 0) / 2**30
+        tmp = (mem.get("temp_size_in_bytes") or 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {rf['compute_s']:.2e}s | {rf['memory_s']:.2e}s "
+            f"| {rf['collective_s']:.2e}s | {rf['dominant']} "
+            f"| {rf['useful_frac']:.2f} | {arg:.1f}+{tmp:.1f}GB |")
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    out.append(f"\n{n_ok}/{len(rows)} cells compiled.")
+    return "\n".join(out)
+
+
+def main():
+    for path in sys.argv[1:] or ["dryrun_single_pod.json"]:
+        print(f"\n== {path} ==")
+        print(fmt_table(path))
+
+
+if __name__ == "__main__":
+    main()

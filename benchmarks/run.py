@@ -1,0 +1,45 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast subset (CI)
+  PYTHONPATH=src python -m benchmarks.run --full     # larger workloads
+  PYTHONPATH=src python -m benchmarks.run --only fig7
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import paper_figs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    scale = 0.08 if args.full else 0.03
+
+    benches = {
+        "fig7": lambda: paper_figs.fig7_total_time(scale=scale),
+        "fig8a": lambda: paper_figs.fig8a_query_size(scale=scale),
+        "fig8b": lambda: paper_figs.fig8b_limit(scale=max(scale, 0.05)),
+        "t3": lambda: paper_figs.t3_unsolved(scale=max(scale, 0.05)),
+        "t4": lambda: paper_figs.t4_memory(scale=scale),
+        "fig10": lambda: paper_figs.fig10_ablations(scale=scale),
+        "fig11": lambda: paper_figs.fig11_lsqb(),
+        "fig14": lambda: paper_figs.fig14_eps(scale=max(scale, 0.05)),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:   # noqa: BLE001
+            print(f"{name}.ERROR,0,{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""CEMR core: the paper's contribution.
+
+  graph       host-side CSR graphs, generators, random-walk queries
+  filtering   LDF/NLF + candidate space + bitmap auxiliary structure
+  ordering    matching orders (Eq. 2-3 + ablation orders)
+  encoding    black-white encoding (Eq. 4-5) + static query analysis
+  ref_engine  paper-faithful DFS engine (Algorithms 1-4) — baseline
+  engine      vectorized tile engine (TPU-native adaptation)
+  count       leaf counting with injectivity inclusion-exclusion
+  oracle      networkx cross-check (tests only)
+"""
+from .graph import (Graph, build_graph, random_walk_query, synthetic_dataset,
+                    synthetic_labeled_graph)
+from .filtering import CandidateSpace, build_candidate_space, pack_bitmap_adjacency
+from .ref_engine import MatchResult, MatchStats, cemr_match, preprocess
+
+__all__ = [
+    "Graph", "build_graph", "random_walk_query", "synthetic_dataset",
+    "synthetic_labeled_graph", "CandidateSpace", "build_candidate_space",
+    "pack_bitmap_adjacency", "MatchResult", "MatchStats", "cemr_match",
+    "preprocess",
+]

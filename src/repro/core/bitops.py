@@ -1,0 +1,85 @@
+"""JAX bitset utilities for the vectorized CEMR engine.
+
+Candidate sets are uint32 bitmaps over per-label candidate spaces. These
+helpers are pure jnp (VPU-friendly on TPU: 32-lane bitwise ops +
+`lax.population_count`), shared by the engine and the Pallas kernel oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["popcount_words", "row_popcount", "onehot_word_mask",
+           "clear_bit_rows", "expand_select", "nth_set_bit"]
+
+
+def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-word popcount (uint32 → int32)."""
+    return jax.lax.population_count(words).astype(jnp.int32)
+
+
+def row_popcount(bm: jnp.ndarray) -> jnp.ndarray:
+    """(…, W) uint32 bitmap → (…,) int32 total set bits."""
+    return popcount_words(bm).sum(axis=-1)
+
+
+def onehot_word_mask(idx: jnp.ndarray, n_words: int) -> jnp.ndarray:
+    """(T,) int32 bit positions → (T, n_words) uint32 with that single bit set.
+    Negative idx → all-zero row."""
+    word = idx >> 5
+    bit = (idx & 31).astype(jnp.uint32)
+    cols = jnp.arange(n_words, dtype=jnp.int32)[None, :]
+    hit = (cols == word[:, None]) & (idx >= 0)[:, None]
+    return jnp.where(hit, jnp.uint32(1) << bit[:, None], jnp.uint32(0))
+
+
+def clear_bit_rows(bm: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Clear bit `idx[t]` in row t of bitmap (T, W). idx<0 → no-op row."""
+    return bm & ~onehot_word_mask(idx, bm.shape[-1])
+
+
+def nth_set_bit(word: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:
+    """(K,) uint32 word, (K,) int32 rank → bit position of the rank-th set bit
+    (0-based). Undefined (returns 0..31 garbage) when rank ≥ popcount(word)."""
+    bits = ((word[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :])
+            & jnp.uint32(1)).astype(jnp.int32)            # (K, 32)
+    cums = jnp.cumsum(bits, axis=1)
+    cond = (cums == rank[:, None] + 1) & (bits == 1)
+    return jnp.argmax(cond, axis=1).astype(jnp.int32)
+
+
+def expand_select(bm: jnp.ndarray, start: jnp.ndarray, k: int):
+    """Row-major enumeration of set bits of a (T, W) bitmap.
+
+    Selects global set-bit ranks [start, start+k) in row-major order and
+    returns (rows, bitpos, valid, total):
+      rows   (k,) int32 source row of each selected bit
+      bitpos (k,) int32 bit position (candidate-space index) of the bit
+      valid  (k,) bool  rank < total
+      total  ()   int32 total set bits in bm
+
+    This is the fixed-capacity frontier-expansion primitive: the tile
+    scheduler re-invokes with advancing `start` until `start ≥ total`
+    (DFS-over-tiles with bounded memory, DESIGN.md §2).
+    """
+    t_rows = bm.shape[0]
+    pc = popcount_words(bm)                       # (T, W)
+    row_counts = pc.sum(axis=1)                   # (T,)
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                           jnp.cumsum(row_counts, dtype=jnp.int32)])
+    total = cum[-1]
+    g = start + jnp.arange(k, dtype=jnp.int32)
+    rows = jnp.clip(jnp.searchsorted(cum, g, side="right").astype(jnp.int32) - 1,
+                    0, t_rows - 1)
+    q = g - cum[rows]                             # within-row rank
+    pc_r = pc[rows]                               # (k, W)
+    pcc = jnp.cumsum(pc_r, axis=1)
+    word_idx = jnp.sum((pcc <= q[:, None]).astype(jnp.int32), axis=1)
+    word_idx = jnp.clip(word_idx, 0, bm.shape[1] - 1)
+    pcc_excl = pcc - pc_r
+    q_in_word = q - jnp.take_along_axis(pcc_excl, word_idx[:, None], axis=1)[:, 0]
+    words = jnp.take_along_axis(bm[rows], word_idx[:, None], axis=1)[:, 0]
+    bit = nth_set_bit(words, q_in_word)
+    bitpos = word_idx * 32 + bit
+    valid = g < total
+    return rows, bitpos.astype(jnp.int32), valid, total

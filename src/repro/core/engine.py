@@ -1,0 +1,512 @@
+"""Vectorized CEMR engine: level-synchronous tile enumeration in JAX.
+
+TPU-native adaptation of the paper's DFS enumeration (DESIGN.md §2):
+
+  * a *tile* is a fixed-capacity batch of (aggregated) partial embeddings:
+    IDX columns (deterministically mapped vertices, one int32 per row) and
+    BM columns (aggregated white mappings, uint32 bitmaps over per-label
+    candidate spaces);
+  * extending u_i = gather adjacency bitmap rows for the backward-neighbor
+    mappings and AND them (the `bitmap_intersect` hot loop — Pallas kernel on
+    TPU, jnp oracle on CPU);
+  * CEM: Case-2/4.2 extensions *store* R as a bitmap column — whole sub-trees
+    advance as one row (the paper's aggregated embeddings);
+  * expansion to IDX columns is a fixed-capacity enumeration of set bits
+    (`bitops.expand_select`); overflow re-enters the host work stack, giving
+    DFS-over-tiles bounded memory and anytime results;
+  * CER: rows whose extension read-set (BK columns + same-label IDX columns)
+    coincide are brother embeddings — the engine measures the duplicate
+    fraction and (optionally) computes the intersection on the deduplicated
+    prefix only (bucketed compute, see §Perf);
+  * contained-vertex pruning = per-row popcount threshold;
+  * injectivity: IDX values of the same label are pairwise distinct by eager
+    bit-clearing; BM columns are kept disjoint from same-label IDX values;
+    same-label BM×BM overlap is corrected exactly at the leaf by
+    inclusion-exclusion (groups capped at 3 by the encoder).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops
+from .count import iter_injective
+from .encoding import QueryAnalysis
+from .filtering import CandidateSpace
+from .graph import Graph
+from .plan import BM, IDX, LevelOp, MatchingPlan, build_plan
+from .ref_engine import preprocess
+
+__all__ = ["VectorMatchResult", "VectorStats", "vector_match", "VectorEngine"]
+
+
+@dataclasses.dataclass
+class VectorStats:
+    device_steps: int = 0
+    tiles: int = 0
+    expansions: int = 0
+    rows_processed: int = 0
+    rows_alive: int = 0
+    gather_and_ops: int = 0          # adjacency rows gathered+ANDed (work proxy)
+    dedup_keys_seen: int = 0
+    dedup_unique: int = 0
+    leaf_tiles: int = 0
+    peak_stack: int = 0
+
+    @property
+    def dedup_ratio(self) -> float:
+        return (self.dedup_unique / self.dedup_keys_seen
+                if self.dedup_keys_seen else 1.0)
+
+
+@dataclasses.dataclass
+class VectorMatchResult:
+    count: int
+    stats: VectorStats
+    timed_out: bool
+    embeddings: list[dict[int, int]] | None = None
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions (built per level, cached per engine instance)
+# ---------------------------------------------------------------------------
+
+def _union_rows(table, bmcol):
+    """OR of adjacency rows selected by a bitmap column (no-black-bwd path).
+    Formulated as a boolean matmul: MXU-friendly on TPU."""
+    s = table.shape[0]
+    t = bmcol.shape[0]
+    # unpack source bits -> (T, S)
+    word = jnp.arange(s, dtype=jnp.int32) >> 5
+    bit = (jnp.arange(s, dtype=jnp.int32) & 31).astype(jnp.uint32)
+    src_bits = ((bmcol[:, word] >> bit[None, :]) & jnp.uint32(1)).astype(jnp.int32)
+    # unpack table bits -> (S, 32*W); matmul; repack
+    w = table.shape[1]
+    tab_bits = ((table[:, :, None] >> jnp.arange(32, dtype=jnp.uint32)[None, None, :])
+                & jnp.uint32(1)).astype(jnp.int32).reshape(s, w * 32)
+    hit = (src_bits @ tab_bits) > 0                       # (T, 32W)
+    hit = hit.reshape(t, w, 32)
+    packed = (hit.astype(jnp.uint32)
+              << jnp.arange(32, dtype=jnp.uint32)[None, None, :]).sum(axis=2,
+                                                                      dtype=jnp.uint32)
+    return packed
+
+
+class VectorEngine:
+    """Compiled matcher for one (query, data, encoding) plan."""
+
+    def __init__(self, cs: CandidateSpace, an: QueryAnalysis, *,
+                 tile_rows: int = 256, use_cv: bool = True,
+                 use_dedup: bool = True, intersect_fn=None):
+        self.plan = build_plan(cs, an)
+        self.cs, self.an = cs, an
+        self.t = tile_rows
+        self.use_cv = use_cv
+        self.use_dedup = use_dedup
+        self.intersect_fn = intersect_fn  # pluggable kernel (Pallas ops)
+        p = self.plan
+        self.tables = {f"{u}:{w}": jnp.asarray(t) for (u, w), t in p.tables.items()}
+        self.masks = {u: jnp.asarray(m) for u, m in p.masks.items()}
+        self.stats = VectorStats()
+        self._stages = self._build_stages()
+        self._jit_cache: dict = {}
+
+    # ------------------------------------------------------------- stage plan
+    def _build_stages(self):
+        """Flatten per-level ops into micro-op stages. Stage kinds:
+        ('decompose', vertex, slot, same_bm, words_src)
+        ('extend', LevelOp)
+        Stage s consumes a tile and either emits a tile for stage s+1 or a
+        pending expansion."""
+        stages: list = []
+        # root pseudo-op
+        root_op = LevelOp(vertex=self.plan.root_vertex, case=1, store=IDX,
+                          bk_pairs=[], wt_vertices=[], union_src=-1,
+                          decompose=[], con_threshold=len(self.an.con[0]),
+                          same_label_idx_slots=[], same_label_bm=[],
+                          dedup_slots=[], n_words=self.plan.root_words,
+                          idx_slot=0, level=0)
+        stages.append(("extend", root_op))
+        for op in self.plan.ops:
+            for (v, slot, same_bm) in op.decompose:
+                words_src = self.plan.words[self.plan.label_of[v]]
+                stages.append(("decompose", v, slot, same_bm, words_src))
+            stages.append(("extend", op))
+        return stages
+
+    # -------------------------------------------------------------- jit steps
+    def _compute_fn(self, si: int):
+        key = ("compute", si)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        stage = self._stages[si]
+
+        if stage[0] == "decompose":
+            _, v, slot, same_bm, words_src = stage
+
+            def compute(tile, tables, masks):
+                return tile["bm"][v], tile["alive"]
+        else:
+            op: LevelOp = stage[1]
+            pairs = [(s, u, op.vertex) for (s, u) in op.bk_pairs]
+            con = max(op.con_threshold, 1) if self.use_cv else 1
+            root = op.level == 0
+            ext_fn = self.intersect_fn
+
+            def compute(tile, tables, masks):
+                alive = tile["alive"]
+                if root:
+                    r = jnp.broadcast_to(masks[op.vertex][None, :],
+                                         (tile["alive"].shape[0], op.n_words))
+                elif pairs:
+                    if ext_fn is not None:
+                        tabs = [tables[f"{u}:{w}"] for (_, u, w) in pairs]
+                        idxs = jnp.stack([tile["idx"][:, s] for (s, _, _) in pairs], 1)
+                        r = ext_fn(tabs, idxs)
+                    else:
+                        r = None
+                        for (s, u_j, u_i) in pairs:
+                            rows = tables[f"{u_j}:{u_i}"][tile["idx"][:, s]]
+                            r = rows if r is None else (r & rows)
+                else:
+                    r = _union_rows(tables[f"{op.union_src}:{op.vertex}"],
+                                    tile["bm"][op.union_src])
+                for s in op.same_label_idx_slots:
+                    r = bitops.clear_bit_rows(r, tile["idx"][:, s])
+                pop = bitops.row_popcount(r)
+                ok = alive & (pop >= con) & (pop > 0)
+                r = jnp.where(ok[:, None], r, jnp.uint32(0))
+                return r, ok
+
+        fn = jax.jit(compute)
+        self._jit_cache[key] = fn
+        return fn
+
+    def _store_bm_fn(self, si: int):
+        key = ("store", si)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        op: LevelOp = self._stages[si][1]
+
+        def store(tile, r, ok):
+            bm = dict(tile["bm"])
+            bm[op.vertex] = r
+            return {"idx": tile["idx"], "bm": bm, "alive": ok}
+
+        fn = jax.jit(store)
+        self._jit_cache[key] = fn
+        return fn
+
+    def _expand_fn(self, si: int):
+        key = ("expand", si)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        stage = self._stages[si]
+        t_out = self.t
+        if stage[0] == "decompose":
+            _, v, slot, same_bm, _ = stage
+            wt_prune: list[tuple[int, str]] = []
+            same_label_bm = list(same_bm)
+            drop_bm = v
+            new_vertex = v
+        else:
+            op: LevelOp = stage[1]
+            wt_prune = [(u_j, f"{op.vertex}:{u_j}") for u_j in op.wt_vertices]
+            same_label_bm = list(op.same_label_bm)
+            drop_bm = None
+            new_vertex = op.vertex
+
+        def expand(tile, r, start, tables):
+            rows, bitpos, valid, total = bitops.expand_select(r, start, t_out)
+            idx = tile["idx"][rows]
+            idx = jnp.concatenate([idx, bitpos[:, None]], axis=1)
+            bm_out = {}
+            alive = valid
+            for u, col in tile["bm"].items():
+                if u == drop_bm:
+                    continue
+                g = col[rows]
+                for (u_j, tkey) in wt_prune:
+                    if u_j == u:
+                        g = g & tables[tkey][bitpos]
+                if u in same_label_bm:
+                    g = bitops.clear_bit_rows(g, bitpos)
+                alive = alive & (bitops.row_popcount(g) > 0)
+                bm_out[u] = g
+            return {"idx": idx, "bm": bm_out, "alive": alive}, total
+
+        fn = jax.jit(expand)
+        self._jit_cache[key] = fn
+        return fn
+
+    def _leaf_fn(self):
+        key = ("leaf",)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        plan = self.plan
+        singles = list(plan.leaf_singles)
+        groups = [list(g) for g in plan.leaf_groups]
+
+        def leaf(tile):
+            terms = []
+            for u in singles:
+                terms.append(bitops.row_popcount(tile["bm"][u]))
+            for g in groups:
+                if len(g) == 2:
+                    a, b = tile["bm"][g[0]], tile["bm"][g[1]]
+                    terms += [bitops.row_popcount(a), bitops.row_popcount(b),
+                              bitops.row_popcount(a & b)]
+                else:  # len 3 (encoder cap)
+                    a, b, c = (tile["bm"][g[0]], tile["bm"][g[1]],
+                               tile["bm"][g[2]])
+                    terms += [bitops.row_popcount(a), bitops.row_popcount(b),
+                              bitops.row_popcount(c),
+                              bitops.row_popcount(a & b),
+                              bitops.row_popcount(a & c),
+                              bitops.row_popcount(b & c),
+                              bitops.row_popcount(a & b & c)]
+            t = (jnp.stack(terms, axis=1) if terms
+                 else jnp.zeros((tile["alive"].shape[0], 0), jnp.int32))
+            return t, tile["alive"]
+
+        fn = jax.jit(leaf)
+        self._jit_cache[key] = fn
+        return fn
+
+    def _dedup_fn(self, si: int):
+        """Brother-embedding analysis (vectorized CER): group rows by the
+        extension read-set columns. Returns (n_unique, rep_rows, group_of):
+        rep_rows[g] = row index of group g's representative; group_of[t] =
+        group id of row t (undefined for dead rows)."""
+        key = ("dedup", si)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        op: LevelOp = self._stages[si][1]
+        slots = list(op.dedup_slots)
+
+        def uniq(tile):
+            t = tile["alive"].shape[0]
+            cols = [tile["idx"][:, s] for s in slots]
+            order = jnp.lexsort(tuple(cols[::-1]) + (~tile["alive"],))
+            sorted_cols = [c[order] for c in cols]
+            alive_s = tile["alive"][order]
+            diff = jnp.zeros(t, bool).at[0].set(True)
+            for c in sorted_cols:
+                diff = diff | jnp.concatenate([jnp.ones(1, bool),
+                                               c[1:] != c[:-1]])
+            gid_sorted = jnp.cumsum(diff.astype(jnp.int32)) - 1
+            n_unique = jnp.sum(diff & alive_s)
+            rep_rows = jnp.zeros(t, jnp.int32).at[gid_sorted].max(
+                jnp.where(diff, order, 0).astype(jnp.int32))
+            group_of = jnp.zeros(t, jnp.int32).at[order].set(gid_sorted)
+            return n_unique, rep_rows, group_of
+
+        fn = jax.jit(uniq)
+        self._jit_cache[key] = fn
+        return fn
+
+    def _bucket_compute_fn(self, si: int, bucket: int):
+        """CER-bucketed extension: run the gather+AND on `bucket` unique
+        representative rows instead of the full tile, then broadcast R back
+        through group ids — the vectorized realization of the paper's CEB
+        reuse (one extension computation per brother-embedding class)."""
+        key = ("bucket", si, bucket)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        op: LevelOp = self._stages[si][1]
+        pairs = [(s, u, op.vertex) for (s, u) in op.bk_pairs]
+        con = max(op.con_threshold, 1) if self.use_cv else 1
+
+        def compute(tile, rep_rows, group_of, tables):
+            reps = rep_rows[:bucket]
+            idx_b = tile["idx"][reps]
+            alive_b = tile["alive"][reps]
+            r = None
+            for (s, u_j, u_i) in pairs:
+                rows = tables[f"{u_j}:{u_i}"][idx_b[:, s]]
+                r = rows if r is None else (r & rows)
+            r = jnp.where(alive_b[:, None], r, jnp.uint32(0))
+            # broadcast per-group results back to all rows
+            r_full = r[jnp.clip(group_of, 0, bucket - 1)]
+            for s in op.same_label_idx_slots:
+                r_full = bitops.clear_bit_rows(r_full, tile["idx"][:, s])
+            pop = bitops.row_popcount(r_full)
+            ok = tile["alive"] & (pop >= con) & (pop > 0)
+            r_full = jnp.where(ok[:, None], r_full, jnp.uint32(0))
+            return r_full, ok
+
+        fn = jax.jit(compute)
+        self._jit_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------- leaf count
+    def _leaf_count(self, tile) -> tuple[int, np.ndarray]:
+        terms, alive = self._leaf_fn()(tile)
+        terms = np.asarray(terms)
+        alive = np.asarray(alive)
+        plan = self.plan
+        counts = np.zeros(terms.shape[0], dtype=object)
+        k = 0
+        per_row = np.ones(terms.shape[0], dtype=object)
+        for _u in plan.leaf_singles:
+            per_row = per_row * terms[:, k].astype(object)
+            k += 1
+        for g in plan.leaf_groups:
+            if len(g) == 2:
+                pa, pb, pab = terms[:, k], terms[:, k + 1], terms[:, k + 2]
+                per_row = per_row * (pa.astype(object) * pb - pab)
+                k += 3
+            else:
+                pa, pb, pc = terms[:, k], terms[:, k + 1], terms[:, k + 2]
+                pab, pac, pbc = terms[:, k + 3], terms[:, k + 4], terms[:, k + 5]
+                pabc = terms[:, k + 6]
+                per_row = per_row * (
+                    pa.astype(object) * pb * pc - pab * pc - pac * pb
+                    - pbc * pa + 2 * pabc)
+                k += 7
+        counts = np.where(alive, per_row, 0)
+        return int(counts.sum()), counts
+
+    # --------------------------------------------------------------- schedule
+    def run(self, *, limit: int = 1_000_000, max_steps: int | None = None,
+            materialize: bool = False) -> VectorMatchResult:
+        st = self.stats = VectorStats()
+        t = self.t
+        n_stages = len(self._stages)
+        count = 0
+        timed_out = False
+        embeddings: list[dict[int, int]] = []
+
+        root_tile = {"idx": jnp.zeros((1, 0), jnp.int32), "bm": {},
+                     "alive": jnp.ones((1,), bool)}
+        # stack items: ("tile", stage_idx, tile) | ("expand", stage_idx, tile, R, cursor)
+        stack: list = [("tile", 0, root_tile)]
+
+        while stack:
+            if max_steps is not None and st.device_steps >= max_steps:
+                timed_out = True
+                break
+            st.peak_stack = max(st.peak_stack, len(stack))
+            item = stack.pop()
+            if item[0] == "tile":
+                _, si, tile = item
+                if si == n_stages:           # leaf
+                    st.leaf_tiles += 1
+                    st.device_steps += 1
+                    c, per_row = self._leaf_count(tile)
+                    if materialize and c:
+                        embeddings.extend(self._materialize(tile))
+                    count += c
+                    if count >= limit:
+                        break
+                    continue
+                stage = self._stages[si]
+                st.tiles += 1
+                st.device_steps += 1
+                rows = int(tile["alive"].shape[0])
+                st.rows_processed += rows
+                if stage[0] == "decompose":
+                    r, ok = self._compute_fn(si)(tile, self.tables, self.masks)
+                    r = jnp.where(ok[:, None], r, jnp.uint32(0))
+                    stack.append(("expand", si, tile, r, 0))
+                else:
+                    op: LevelOp = stage[1]
+                    bucketed = False
+                    if self.use_dedup and op.dedup_slots and op.bk_pairs:
+                        u, rep_rows, group_of = self._dedup_fn(si)(tile)
+                        u = int(u)
+                        st.dedup_keys_seen += int(np.asarray(tile["alive"]).sum())
+                        st.dedup_unique += u
+                        if 0 < u <= rows // 2:
+                            # CER: compute one extension per brother class
+                            bucket = 1 << max(u - 1, 1).bit_length()
+                            bucket = min(bucket, rows)
+                            r, ok = self._bucket_compute_fn(si, bucket)(
+                                tile, rep_rows, group_of, self.tables)
+                            st.gather_and_ops += bucket * len(op.bk_pairs)
+                            bucketed = True
+                    if not bucketed:
+                        st.gather_and_ops += rows * max(len(op.bk_pairs), 1)
+                        r, ok = self._compute_fn(si)(tile, self.tables,
+                                                     self.masks)
+                    if op.store == BM:
+                        new_tile = self._store_bm_fn(si)(tile, r, ok)
+                        if bool(jnp.any(new_tile["alive"])):
+                            stack.append(("tile", si + 1, new_tile))
+                    else:
+                        stack.append(("expand", si, tile, r, 0))
+            else:
+                _, si, tile, r, cursor = item
+                st.device_steps += 1
+                st.expansions += 1
+                out, total = self._expand_fn(si)(tile, r, jnp.int32(cursor),
+                                                 self.tables)
+                total = int(total)
+                if cursor + t < total:
+                    stack.append(("expand", si, tile, r, cursor + t))
+                alive_n = int(np.asarray(out["alive"]).sum())
+                st.rows_alive += alive_n
+                if alive_n:
+                    stack.append(("tile", si + 1, out))
+
+        return VectorMatchResult(count=min(count, limit), stats=st,
+                                 timed_out=timed_out,
+                                 embeddings=embeddings if materialize else None)
+
+    # ------------------------------------------------------------ materialize
+    def _materialize(self, tile) -> list[dict[int, int]]:
+        plan = self.plan
+        idx = np.asarray(tile["idx"])
+        alive = np.asarray(tile["alive"])
+        bm = {u: np.asarray(v) for u, v in tile["bm"].items()}
+        out = []
+        for row in np.nonzero(alive)[0]:
+            base = {}
+            for k, u in enumerate(plan.idx_slots):
+                space = plan.spaces[plan.label_of[u]]
+                base[u] = int(space[idx[row, k]])
+            # decode bitmap sets
+            sets: dict[int, np.ndarray] = {}
+            for u, col in bm.items():
+                bits = np.nonzero(np.unpackbits(
+                    col[row].view(np.uint8), bitorder="little"))[0]
+                space = plan.spaces[plan.label_of[u]]
+                sets[u] = space[bits[bits < space.shape[0]]]
+            groups: dict[int, list[int]] = {}
+            for u in sets:
+                groups.setdefault(plan.label_of[u], []).append(u)
+            group_list = list(groups.values())
+
+            def rec(gi, acc):
+                if gi == len(group_list):
+                    out.append(dict(acc))
+                    return
+                us = group_list[gi]
+                for combo in iter_injective([sets[u] for u in us]):
+                    acc2 = dict(acc)
+                    for u, v in zip(us, combo):
+                        acc2[u] = int(v)
+                    rec(gi + 1, acc2)
+
+            rec(0, base)
+        return out
+
+
+def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
+                 tile_rows: int = 256, limit: int = 1_000_000,
+                 max_steps: int | None = None, materialize: bool = False,
+                 use_cv: bool = True, use_dedup: bool = True,
+                 intersect_fn=None, order: list[int] | None = None,
+                 ) -> VectorMatchResult:
+    """End-to-end vectorized CEMR matching (preprocess + tile enumeration)."""
+    cs, an = preprocess(query, data, encoding=encoding, order=order)
+    if any(c.shape[0] == 0 for c in cs.cand):
+        return VectorMatchResult(count=0, stats=VectorStats(), timed_out=False,
+                                 embeddings=[] if materialize else None)
+    eng = VectorEngine(cs, an, tile_rows=tile_rows, use_cv=use_cv,
+                       use_dedup=use_dedup, intersect_fn=intersect_fn)
+    return eng.run(limit=limit, max_steps=max_steps, materialize=materialize)

@@ -1,0 +1,205 @@
+"""Preprocessing phase: candidate filtering + auxiliary structure (paper §2.2.1).
+
+Implements:
+  * LDF (label-degree filter) and NLF (neighbor-label filter) [Zhu et al.]
+  * iterative edge-consistency refinement (CFL/CECI-style): every candidate of
+    u must have ≥1 candidate neighbor in C(u') for every query edge (u,u')
+  * the auxiliary structure  A^{u}_{u'}(v) = N(v) ∩ C(u')  in two layouts:
+      - index lists (reference DFS engine)
+      - packed uint32 bitmaps (vectorized TPU engine / Pallas kernel)
+
+Directed + edge-labeled graphs (paper §6.4): candidate edges respect direction
+and edge label — if the query has u→w, data must have v→v'; if both u→w and
+w→u exist, both data directions are required, each with its matching label.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["CandidateSpace", "build_candidate_space", "pack_bitmap_adjacency"]
+
+
+@dataclasses.dataclass
+class CandidateSpace:
+    """Filtered candidates + candidate-edge adjacency for a (Q, G) pair.
+
+    cand[u]   : (k_u,) int32 data-vertex ids, ascending
+    adj[(u,w)]: list over candidate-index c of sorted int32 arrays of
+                candidate *indices* into cand[w] (A^{u}_{w}(cand[u][c]))
+                for every adjacent query pair (u,w), both orders.
+    """
+
+    query: Graph
+    data: Graph
+    cand: list[np.ndarray]
+    adj: dict[tuple[int, int], list[np.ndarray]]
+
+    def sizes(self) -> np.ndarray:
+        return np.array([c.shape[0] for c in self.cand], dtype=np.int64)
+
+    def index_of(self, u: int, data_vertex: int) -> int:
+        c = self.cand[u]
+        j = int(np.searchsorted(c, data_vertex))
+        if j < c.shape[0] and c[j] == data_vertex:
+            return j
+        return -1
+
+
+def _query_adjacent_pairs(query: Graph) -> list[tuple[int, int]]:
+    """All adjacent (u,w) pairs, both orders, using undirected adjacency."""
+    pairs: set[tuple[int, int]] = set()
+    for u in range(query.n):
+        for w in query.all_neighbors(u):
+            pairs.add((u, int(w)))
+            pairs.add((int(w), u))
+    return sorted(pairs)
+
+
+def _compatible_neighbors(query: Graph, data: Graph, u: int, w: int,
+                          v: int) -> np.ndarray:
+    """Data vertices v' such that mapping (u→v, w→v') satisfies every query
+    edge between u and w (direction + edge label)."""
+    if not query.directed:
+        nb = data.neighbors(v)
+        if query.edge_labels is not None:
+            lbl = query.edge_label_of(u, w)
+            row = data.edge_labels[data.indptr[v]:data.indptr[v + 1]]
+            nb = nb[row == lbl]
+        return nb
+    res: np.ndarray | None = None
+    if query.has_edge(u, w):  # u→w requires v→v'
+        nb = data.neighbors(v)
+        if query.edge_labels is not None:
+            lbl = query.edge_label_of(u, w)
+            row = data.edge_labels[data.indptr[v]:data.indptr[v + 1]]
+            nb = nb[row == lbl]
+        res = nb
+    if query.has_edge(w, u):  # w→u requires v'→v
+        nb = data.in_neighbors(v)
+        if query.edge_labels is not None:
+            lbl = query.edge_label_of(w, u)
+            row = data.in_edge_labels[data.in_indptr[v]:data.in_indptr[v + 1]]
+            nb = nb[row == lbl]
+        res = nb if res is None else np.intersect1d(res, nb)
+    assert res is not None, f"query vertices {u},{w} are not adjacent"
+    return res
+
+
+def _ldf_nlf(query: Graph, data: Graph) -> list[np.ndarray]:
+    """Label-degree + neighbor-label filters → initial candidate sets."""
+    lab_g = data.labels
+    by_label: dict[int, np.ndarray] = {}
+
+    def verts_with_label(lbl: int) -> np.ndarray:
+        if lbl not in by_label:
+            by_label[lbl] = np.nonzero(lab_g == lbl)[0].astype(np.int32)
+        return by_label[lbl]
+
+    if data.directed:
+        deg_out = np.diff(data.indptr)
+        deg_in = np.diff(data.in_indptr)
+    else:
+        deg_all = data.degree()
+
+    cand: list[np.ndarray] = []
+    for u in range(query.n):
+        base = verts_with_label(int(query.labels[u]))
+        if data.directed:
+            q_out = query.neighbors(u).shape[0]
+            q_in = query.in_neighbors(u).shape[0]
+            base = base[(deg_out[base] >= q_out) & (deg_in[base] >= q_in)]
+        else:
+            base = base[deg_all[base] >= query.degree(u)]
+        # NLF on undirected neighbor label multiset
+        q_nbr_labels, q_counts = np.unique(
+            query.labels[query.all_neighbors(u)], return_counts=True)
+        keep = np.ones(base.shape[0], dtype=bool)
+        for lbl, cnt in zip(q_nbr_labels.tolist(), q_counts.tolist()):
+            if base.shape[0] == 0:
+                break
+            ok = np.array(
+                [int((lab_g[data.all_neighbors(int(v))] == lbl).sum()) >= cnt
+                 for v in base], dtype=bool)
+            keep &= ok
+        cand.append(base[keep].astype(np.int32))
+    return cand
+
+
+def build_candidate_space(query: Graph, data: Graph, *,
+                          refine_rounds: int = 3) -> CandidateSpace:
+    cand = _ldf_nlf(query, data)
+    pairs = _query_adjacent_pairs(query)
+
+    # --- iterative edge-consistency refinement -------------------------------
+    for _ in range(refine_rounds):
+        changed = False
+        for u in range(query.n):
+            cu = cand[u]
+            if cu.shape[0] == 0:
+                continue
+            keep = np.ones(cu.shape[0], dtype=bool)
+            for w_ in query.all_neighbors(u):
+                w = int(w_)
+                cw = cand[w]
+                if cw.shape[0] == 0:
+                    keep[:] = False
+                    break
+                for i, v in enumerate(cu.tolist()):
+                    if not keep[i]:
+                        continue
+                    nb = _compatible_neighbors(query, data, u, w, v)
+                    if nb.shape[0] == 0:
+                        keep[i] = False
+                        continue
+                    pos = np.searchsorted(cw, nb)
+                    pos = np.clip(pos, 0, cw.shape[0] - 1)
+                    if not np.any(cw[pos] == nb):
+                        keep[i] = False
+            if not np.all(keep):
+                cand[u] = cu[keep]
+                changed = True
+        if not changed:
+            break
+
+    # --- auxiliary structure A ------------------------------------------------
+    adj: dict[tuple[int, int], list[np.ndarray]] = {}
+    for (u, w) in pairs:
+        cu, cw = cand[u], cand[w]
+        rows: list[np.ndarray] = []
+        for v in cu.tolist():
+            nb = _compatible_neighbors(query, data, u, w, v)
+            if cw.shape[0] == 0 or nb.shape[0] == 0:
+                rows.append(np.empty(0, dtype=np.int32))
+                continue
+            pos = np.searchsorted(cw, nb)
+            pos = np.clip(pos, 0, cw.shape[0] - 1)
+            hit = cw[pos] == nb
+            rows.append(np.unique(pos[hit]).astype(np.int32))
+        adj[(u, w)] = rows
+    return CandidateSpace(query=query, data=data, cand=cand, adj=adj)
+
+
+def pack_bitmap_adjacency(cs: CandidateSpace) -> dict[tuple[int, int], np.ndarray]:
+    """Pack A^{u}_{w} into uint32 bitmaps: out[(u,w)] has shape
+    (|C(u)|, ceil(|C(w)|/32)); bit (32*j + b) of row c is set iff
+    cand[w][32*j + b] ∈ A^{u}_{w}(cand[u][c])."""
+    out: dict[tuple[int, int], np.ndarray] = {}
+    for (u, w), rows in cs.adj.items():
+        k_u = cs.cand[u].shape[0]
+        k_w = cs.cand[w].shape[0]
+        words = max(1, (k_w + 31) // 32)
+        bm = np.zeros((max(k_u, 1), words), dtype=np.uint32)
+        if k_u:
+            row_idx = np.repeat(np.arange(k_u, dtype=np.int64),
+                                [r.shape[0] for r in rows])
+            if row_idx.shape[0]:
+                cols = np.concatenate(rows).astype(np.int64)
+                np.bitwise_or.at(
+                    bm, (row_idx, cols >> 5),
+                    (np.uint32(1) << (cols & 31).astype(np.uint32)))
+        out[(u, w)] = bm
+    return out

@@ -1,0 +1,207 @@
+"""Sharding policy: parameter PartitionSpecs and activation constraint rules
+per (architecture family, shape kind, mesh).
+
+Design (DESIGN.md §5):
+  * LM: DP over (pod, data); Megatron TP over `model` for FFN/vocab always
+    (d_ff and vocab chosen divisible); attention head-TP only when both
+    n_heads and n_kv_heads divide the model axis, otherwise attention params
+    replicate over `model` and FSDP-shard over `data`.
+  * MoE: expert-parallel over `model` when n_experts divides it, else
+    tensor-parallel inside experts (granite's 40 experts vs 16).
+  * Decode: KV cache sequence-sharded over `model` (long_500k: over
+    data×model), GSPMD inserts the LSE-combine collectives.
+  * GNN: params replicated (they are small), nodes/edges sharded over DP.
+  * BERT4Rec: item table + logits vocab-sharded over `model`.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_pspecs", "batch_pspecs", "activation_rules", "dp_axes"]
+
+
+def dp_axes(mesh) -> tuple:
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else (axes[0] if axes else None,)
+
+
+def _flat_axes(mesh) -> tuple:
+    """All mesh axes — GNN graphs shard over the full fleet (the model
+    axis would otherwise idle: GNN params are tiny and replicated)."""
+    return tuple(mesh.axis_names)
+
+
+def _divisible(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_pspecs(params_shape, cfg, mesh):
+    """Pytree of PartitionSpec matching `params_shape` (ShapeDtypeStructs)."""
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    fam = cfg.family
+
+    def assign(path, leaf):
+        name = _path_str(path)
+        shp = leaf.shape
+        stacked = name.startswith("blocks/") and fam in ("lm",)
+        off = 1 if stacked and len(shp) > 1 else 0   # leading layer dim
+
+        def spec(*dims):
+            full = [None] * len(shp)
+            for d, ax in dims:
+                full[d] = ax
+            return P(*full)
+
+        if fam == "gnn":
+            return P()   # small params: replicate
+        # ---- embeddings / heads (vocab over model) -------------------------
+        if "embed/table" in name or name == "head/w":
+            v_dim = 0 if "table" in name else 1
+            if shp[v_dim] % tp == 0:
+                return spec((v_dim, "model"))
+            return P()
+        if fam == "recsys":
+            return P()
+        # ---- MoE experts ---------------------------------------------------
+        if "ffn/wi" in name or "ffn/wg" in name or "ffn/wo" in name:
+            if len(shp) - off == 3:   # (E, d|f, f|d) stacked MoE
+                e_dim = off
+                if shp[e_dim] % tp == 0:
+                    # EP over model + FSDP over data on the d_model dim
+                    sp = [(e_dim, "model")]
+                    d_dim = (e_dim + 1 if "wo" not in name else e_dim + 2)
+                    if _divisible(shp[d_dim], mesh, "data"):
+                        sp.append((d_dim, "data"))
+                    return spec(*sp)
+                # E not divisible (granite 40 vs 16): TP inside experts on
+                # the expert-hidden dim f
+                f_dim = (e_dim + 2 if "wo" not in name else e_dim + 1)
+                sp = []
+                if shp[f_dim] % tp == 0:
+                    sp.append((f_dim, "model"))
+                d_dim = (e_dim + 1 if "wo" not in name else e_dim + 2)
+                if _divisible(shp[d_dim], mesh, "data"):
+                    sp.append((d_dim, "data"))
+                return spec(*sp) if sp else P()
+            # dense swiglu: wi/wg (d, f): f over model; wo (f, d): f over model
+            if "wo" in name:
+                if shp[off] % tp == 0:
+                    sp = [(off, "model")]
+                    if _divisible(shp[off + 1], mesh, "data"):
+                        sp.append((off + 1, "data"))
+                    return spec(*sp)
+                return P()
+            if shp[off + 1] % tp == 0:
+                sp = [(off + 1, "model")]
+                if _divisible(shp[off], mesh, "data"):
+                    sp.append((off, "data"))
+                return spec(*sp)
+            return P()
+        if "router" in name:
+            return P()
+        # ---- attention -----------------------------------------------------
+        if "attn/" in name:
+            heads_ok = (cfg.attention != "mla"
+                        and cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0)
+            if name.endswith("/b") or "norm" in name:
+                return P()
+            if heads_ok and len(shp) - off == 2:
+                if "wo" in name:
+                    return spec((off, "model"))
+                return spec((off + 1, "model"))
+            # fallback: FSDP over data on the input dim
+            if len(shp) - off == 2 and _divisible(shp[off], mesh, "data"):
+                return spec((off, "data"))
+            return P()
+        # ---- norms / scalars ------------------------------------------------
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_pspecs(family: str, shape_kind: str, mesh, *, batch: int = 0):
+    dp = dp_axes(mesh)
+    dp1 = dp if (batch == 0 or batch % _size(mesh, dp) == 0) else None
+
+    def make(spec_map):
+        return spec_map
+
+    if family == "lm":
+        if shape_kind == "train":
+            return {"tokens": P(dp1, None)}
+        if shape_kind == "prefill":
+            return {"tokens": P(dp1, None)}
+        # decode: token (B,), lengths (B,)
+        return {"token": P(dp1), "lengths": P(dp1)}
+    if family == "gnn":
+        return {"nodes": P(dp1), "edges": P(dp1)}
+    # recsys
+    return {"ids": P(dp1, None), "targets": P(dp1, None),
+            "mask_positions": P(dp1, None)}
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        if a is not None:
+            n *= mesh.shape[a]
+    return n
+
+
+def activation_rules(cfg, mesh, shape_kind: str, *, batch: int = 0,
+                     seq: int = 0) -> dict:
+    """Logical-name → PartitionSpec rules for sharding.constrain()."""
+    dp = dp_axes(mesh)
+    tp_ok = (getattr(cfg, "attention", "gqa") != "mla"
+             and getattr(cfg, "n_heads", 0) % mesh.shape.get("model", 1) == 0
+             and getattr(cfg, "n_kv_heads", 0) % mesh.shape.get("model", 1) == 0)
+    dpb = dp if (batch == 0 or batch % _size(mesh, dp) == 0) else None
+    sp = "model" if getattr(cfg, "seq_parallel", False) else None
+    rules = {
+        "act_btd": P(dpb, sp, None),
+        "logits_btv": P(dpb, None, "model"),
+        "logits_bv": P(dpb, "model"),
+        "parts_bpv": P(dpb, "model", None),
+        "q_bshd": P(dpb, None, "model", None) if tp_ok else None,
+        "kv_bshd": P(dpb, None, "model", None) if tp_ok else None,
+        "ffn_btf": P(dpb, None, "model"),
+        "gnn_nodes": P(_flat_axes(mesh), None),
+        "gnn_irreps": P(_flat_axes(mesh), None, None),
+        "cp_qblocks": P(dpb, "model", None, None, None, None),
+    }
+    if getattr(cfg, "moe_experts", 0):
+        e_alloc = max(getattr(cfg, "moe_pad_to", 0), cfg.moe_experts)
+        ep_ok = e_alloc % mesh.shape.get("model", 1) == 0
+        e_ax = "model" if ep_ok else None
+        rules["moe_bsec"] = P(dpb, None, e_ax, None)
+        rules["moe_becd"] = P(dpb, e_ax, None, None)
+        rules["moe_becf"] = P(dpb, e_ax, None, "model" if not ep_ok else None)
+    if shape_kind == "decode":
+        if batch and batch % _size(mesh, dp) == 0:
+            rules["cache_bsnd"] = P(dpb, "model", None, None)
+            rules["mla_cache"] = P(dpb, "model", None)
+        else:
+            # long-context single sequence: shard the cache sequence over
+            # data×model (pods replicate = serving replicas)
+            seq_axes = tuple(a for a in ("data", "model")
+                             if a in mesh.axis_names)
+            rules["cache_bsnd"] = P(None, seq_axes, None, None)
+            rules["mla_cache"] = P(None, seq_axes, None)
+    return rules

@@ -1,0 +1,48 @@
+"""Logical-axis sharding context.
+
+Models call `constrain(x, "logical_name")` at strategic points; the launcher
+installs a rule table mapping logical names to PartitionSpecs for the active
+mesh. Outside a context (unit tests, single device) constrain is a no-op, so
+model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["sharding_ctx", "constrain", "P", "current_rules"]
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules: dict):
+    """rules: logical name → PartitionSpec (entries may be None = replicate)."""
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def current_rules():
+    return getattr(_tls, "ctx", None)
+
+
+def constrain(x, name: str):
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        # shape not divisible by the requested axis — fall back to replicated
+        return x

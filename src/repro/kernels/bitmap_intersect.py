@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: batched candidate-bitmap intersection (+ fused popcount).
+
+The CEMR enumeration hot loop (Algorithm 3 line 5 / engine._compute_fn):
+
+    R[t, :] = AND_j  table_j[idx[t, j], :]        (k gathered rows per tile row)
+    pop[t]  = popcount(R[t, :])
+
+Layout: tables live in HBM as (S_j, W) uint32; the per-row gather is expressed
+through scalar-prefetched indices driving each input's BlockSpec index_map —
+the canonical Pallas TPU embedding-gather pattern. Grid = (T, W/WB): one
+frontier row per grid step, WB words staged through VMEM. On a real TPU the
+word-block WB should be sized so k·WB·4B ≈ a few KB per step to amortize HBM
+latency (the workload is memory-bound: arithmetic intensity ≈ k AND-ops per
+4·k bytes gathered — see EXPERIMENTS.md §Roofline[cemr-engine]).
+
+Popcount is fused so the contained-vertex prune (Lemma 2) never re-reads R
+from HBM: the per-row count accumulates across word blocks in the (T, 1)
+output, initialized at the first word block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bitmap_intersect_pallas"]
+
+
+def _kernel(k: int, n_wb: int, idx_ref, *refs):
+    table_blocks = refs[:k]
+    r_ref, pop_ref = refs[k], refs[k + 1]
+    r = table_blocks[0][...]
+    for j in range(1, k):
+        r = r & table_blocks[j][...]
+    r_ref[...] = r
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        pop_ref[...] = jnp.zeros_like(pop_ref)
+
+    pop_ref[...] += jax.lax.population_count(r).astype(jnp.int32).sum(
+        axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("words_per_block", "interpret"))
+def bitmap_intersect_pallas(tables: tuple, idxs: jnp.ndarray, *,
+                            words_per_block: int = 256,
+                            interpret: bool = True):
+    """AND k gathered bitmap rows per frontier row.
+
+    tables: tuple of (S_j, W) uint32 arrays (one per backward neighbor)
+    idxs:   (T, k) int32 row indices into each table
+    Returns (R (T, W) uint32, pop (T, 1) int32).
+    """
+    k = len(tables)
+    t_rows = idxs.shape[0]
+    w = tables[0].shape[1]
+    assert all(tbl.shape[1] == w for tbl in tables)
+    assert idxs.shape[1] == k
+    wb = min(words_per_block, w)
+    # pad W to a multiple of wb (zero words AND to zero: harmless)
+    w_pad = ((w + wb - 1) // wb) * wb
+    if w_pad != w:
+        tables = tuple(jnp.pad(tbl, ((0, 0), (0, w_pad - tbl.shape[1])))
+                       for tbl in tables)
+    n_wb = w_pad // wb
+
+    grid = (t_rows, n_wb)
+    in_specs = [
+        pl.BlockSpec((1, wb),
+                     functools.partial(lambda j, t, wi, idx_ref: (idx_ref[t, j], wi), j))
+        for j in range(k)
+    ]
+    out_specs = [
+        pl.BlockSpec((1, wb), lambda t, wi, idx_ref: (t, wi)),
+        pl.BlockSpec((1, 1), lambda t, wi, idx_ref: (t, 0)),
+    ]
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=out_specs)
+    r, pop = pl.pallas_call(
+        functools.partial(_kernel, k, n_wb), grid_spec=gs,
+        out_shape=(jax.ShapeDtypeStruct((t_rows, w_pad), jnp.uint32),
+                   jax.ShapeDtypeStruct((t_rows, 1), jnp.int32)),
+        interpret=interpret)(idxs, *tables)
+    return r[:, :w], pop

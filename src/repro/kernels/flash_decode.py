@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: flash-decode attention (one new token vs a KV cache).
+
+Serving hot loop for the LM architectures (decode_32k / long_500k cells):
+per (batch, q-head) an online-softmax accumulation over KV blocks:
+
+    m, l, acc updated per S-block;  out = acc / l  at the last block.
+
+Grid = (B, H, S/SB). Blocks staged through VMEM:
+  q   (1, 1, D)    — revisited every S-block (negligible)
+  K,V (1, SB, 1, D) — the streamed operand; SB·D·2·bytes per step
+GQA is expressed in the K/V index_map (kv head = q head // group), so no
+K/V duplication is materialized. `lengths` (scalar-prefetched) masks the
+padded cache tail — this is what the sequence-sharded distributed decode
+(distributed/context_parallel.py) calls per shard before the LSE combine.
+
+Roofline: decode is HBM-bandwidth-bound (2·S·D bytes read per head-group for
+~4·S·D flops ⇒ AI ≈ 1 flop/byte at bf16); the kernel's job is to stream K/V
+exactly once at full bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(scale: float, sb: int, n_sb: int,
+            len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, :].astype(jnp.float32)                   # (1, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (SB, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (SB, D)
+    scores = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale  # (SB,1)
+    pos = s * sb + jax.lax.broadcasted_iota(jnp.int32, (sb, 1), 0)
+    scores = jnp.where(pos < len_ref[b], scores, _NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, scores.max())
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                              # (SB, 1)
+    l_new = l_ref[0, 0] * alpha + p.sum()
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.T, v, preferred_element_type=jnp.float32)          # (1, D)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+    @pl.when(s == n_sb - 1)
+    def _done():
+        o_ref[0, 0, :] = (acc_ref[0, :] / l_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "interpret"))
+def flash_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        lengths: jnp.ndarray | None = None, *,
+                        block_s: int = 128, interpret: bool = True):
+    """q (B, H, D); k, v (B, S, Hkv, D); lengths (B,) → out (B, H, D)."""
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    scale = 1.0 / float(d) ** 0.5
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    sb = min(block_s, s)
+    s_pad = ((s + sb - 1) // sb) * sb
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    n_sb = s_pad // sb
+
+    grid = (b, h, n_sb)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bi, hi, si, lref: (bi, hi, 0)),
+            pl.BlockSpec((1, sb, 1, d),
+                         lambda bi, hi, si, lref: (bi, si, hi // group, 0)),
+            pl.BlockSpec((1, sb, 1, d),
+                         lambda bi, hi, si, lref: (bi, si, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, si, lref: (bi, hi, 0)),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, d), jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_kernel, scale, sb, n_sb), grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret)(lengths.astype(jnp.int32), q, k, v)

@@ -1,0 +1,55 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+Every op has a pure-jnp oracle in ref.py; `use_pallas=False` (the default on
+CPU hosts) routes to the oracle, `use_pallas=True` routes to the kernel
+(interpret=True on CPU, compiled on TPU). The vectorized CEMR engine and the
+LM serve path consume these through `make_intersect_fn` / `decode_attention`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitmap_intersect import bitmap_intersect_pallas
+from .flash_decode import flash_decode_pallas
+
+__all__ = ["bitmap_intersect", "flash_decode", "make_intersect_fn",
+           "decode_attention"]
+
+
+def bitmap_intersect(tables, idxs, *, use_pallas: bool = False,
+                     interpret: bool = True, words_per_block: int = 256):
+    tables = tuple(tables)
+    if use_pallas:
+        return bitmap_intersect_pallas(tables, idxs,
+                                       words_per_block=words_per_block,
+                                       interpret=interpret)
+    return ref.bitmap_intersect_ref(tables, idxs)
+
+
+def flash_decode(q, k, v, lengths=None, *, use_pallas: bool = False,
+                 interpret: bool = True, block_s: int = 128):
+    if use_pallas:
+        return flash_decode_pallas(q, k, v, lengths, block_s=block_s,
+                                   interpret=interpret)
+    return ref.flash_decode_ref(q, k, v, lengths)
+
+
+def make_intersect_fn(*, use_pallas: bool = True, interpret: bool = True):
+    """Adapter for core.engine.VectorEngine(intersect_fn=...): takes the list
+    of gathered tables + (T, k) indices, returns the ANDed bitmap."""
+
+    def fn(tables, idxs):
+        r, _pop = bitmap_intersect(tables, idxs, use_pallas=use_pallas,
+                                   interpret=interpret)
+        return r
+
+    return fn
+
+
+def decode_attention(q, k, v, lengths=None, *, use_pallas: bool = False,
+                     interpret: bool = True):
+    """(B, H, D) single-token attention over a (B, S, Hkv, D) KV cache."""
+    return flash_decode(q, k, v, lengths, use_pallas=use_pallas,
+                        interpret=interpret)

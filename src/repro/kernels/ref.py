@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bitmap_intersect_ref", "flash_decode_ref", "leaf_count_ref"]
+
+
+def bitmap_intersect_ref(tables, idxs):
+    """R[t] = AND_j tables[j][idxs[t, j]]; pop[t] = popcount(R[t])."""
+    r = None
+    for j, tbl in enumerate(tables):
+        rows = tbl[idxs[:, j]]
+        r = rows if r is None else (r & rows)
+    pop = jax.lax.population_count(r).astype(jnp.int32).sum(axis=1,
+                                                            keepdims=True)
+    return r, pop
+
+
+def flash_decode_ref(q, k, v, lengths=None, scale=None):
+    """Single-token GQA decode attention.
+
+    q: (B, H, D); k, v: (B, S, Hkv, D); lengths: (B,) valid cache lengths.
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bngd,bsnd->bngs", qg, kf) * scale
+    if lengths is not None:
+        mask = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngs,bsnd->bngd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def leaf_count_ref(bms: list, groups: list[list[int]]):
+    """Per-row inclusion-exclusion terms for same-label white groups.
+    bms: list of (T, W) bitmaps; groups index into bms. Returns (T, n_terms)."""
+    def pop(x):
+        return jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+
+    terms = []
+    for g in groups:
+        if len(g) == 1:
+            terms.append(pop(bms[g[0]]))
+        elif len(g) == 2:
+            a, b = bms[g[0]], bms[g[1]]
+            terms += [pop(a), pop(b), pop(a & b)]
+        else:
+            a, b, c = bms[g[0]], bms[g[1]], bms[g[2]]
+            terms += [pop(a), pop(b), pop(c), pop(a & b), pop(a & c),
+                      pop(b & c), pop(a & b & c)]
+    return jnp.stack(terms, axis=1)

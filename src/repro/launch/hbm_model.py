@@ -1,0 +1,114 @@
+"""Analytic minimum HBM traffic per (arch × shape) cell — the roofline
+memory term.
+
+XLA:CPU `bytes accessed` is not usable for a TPU roofline: it (a) counts
+while-loop bodies once (scans), (b) counts every unfused op's operands
+(CPU fuses far less than TPU), and (c) explodes when the cost-compile
+collapses flash scans. Instead the memory term uses the *minimum* traffic a
+perfect TPU compiler would do:
+
+  train   : params read (fwd+bwd+remat-fwd) + grad write/read + Adam m/v
+            read+write, + each boundary activation written+read once,
+            + flash K/V streamed S/q_chunk times, + logits slab r/w
+  prefill : params read once + activations once + K/V streaming
+  decode  : params read once + KV cache read once + write one slot
+  gnn     : params + node features read per layer per edge-endpoint gather
+            + messages written/read once
+  recsys  : encoder like a small LM + the vocab-shard logits slab
+
+All figures are per device, bytes. See EXPERIMENTS.md §Roofline for how this
+floor is used (memory_s = floor / 819 GB/s).
+"""
+from __future__ import annotations
+
+from repro.config import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES
+
+__all__ = ["hbm_floor_bytes"]
+
+_B16, _B32 = 2, 4
+
+
+def _lm_floor(cfg, shape_id, n_dp, n_tp, chips):
+    spec = LM_SHAPES[shape_id]
+    kind, b, s = spec["kind"], spec["global_batch"], spec["seq_len"]
+    p_dev32 = cfg.n_params() * _B32 / chips            # sharded f32 master
+    d = cfg.d_model
+    if kind == "decode":
+        tok_dev = max(b // n_dp, 1)
+        if cfg.attention == "mla":
+            cache_row = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        else:
+            cache_row = 2 * cfg.n_kv_heads * cfg.head_dim
+        cache_dev = b * s * cache_row * cfg.n_layers * _B16 / chips * n_dp \
+            if b >= n_dp else b * s * cache_row * cfg.n_layers * _B16 / chips
+        # params for active experts only on the read path
+        p_read = cfg.n_active_params() * _B16 / chips if cfg.moe_experts \
+            else cfg.n_params() * _B16 / chips
+        return p_read + cache_dev * 1.0 + tok_dev * d * _B16 * 8
+    tok_dev = b * s // n_dp
+    act = cfg.n_layers * tok_dev * d * _B16
+    kv_dim = (cfg.n_kv_heads * cfg.head_dim if cfg.attention != "mla"
+              else cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+    kv_stream = (cfg.n_layers * 2 * tok_dev * kv_dim * _B16
+                 * max(s // max(cfg.q_chunk, 1), 1))
+    logits = tok_dev * (cfg.vocab // n_tp) * _B32 * 2
+    if kind == "prefill":
+        return cfg.n_params() * _B16 / chips + 6 * act + kv_stream + \
+            tok_dev // s * (cfg.vocab // n_tp) * _B32
+    # train: 3 param reads (fwd, bwd, remat) + grad w/r + m/v r/w ≈ 9 passes
+    return 9 * p_dev32 + 14 * act + 3 * kv_stream + logits
+
+
+def _gnn_floor(cfg, shape_id, n_dp, chips, bundle):
+    n, e, d_feat, _ = bundle._shape_geom(shape_id) if hasattr(
+        bundle, "_shape_geom") else (None,) * 4
+    spec = GNN_SHAPES[shape_id]
+    if spec["kind"] == "sampled":
+        from repro.data.sampler import sampled_shape
+        n, e = sampled_shape(spec["batch_nodes"], spec["fanout"])
+    elif spec["kind"] == "batched":
+        n = spec["batch"] * spec["n_nodes"]
+        e = spec["batch"] * spec["n_edges"]
+    else:
+        n, e = spec["n_nodes"], spec["n_edges"]
+    c = cfg.d_hidden
+    if cfg.model == "equiformer_v2":
+        c = c * (cfg.extra.get("l_max", 6) + 1) ** 2
+    elif cfg.model == "nequip":
+        c = c * (cfg.extra.get("l_max", 2) + 1) ** 2
+    n_dev, e_dev = n / n_dp, e / n_dp
+    per_layer = (2 * e_dev * c * _B32        # gather src + scatter msg
+                 + 2 * n_dev * c * _B32)     # node read + write
+    return cfg.n_layers * per_layer * 3      # fwd + bwd + remat-ish
+
+
+def _recsys_floor(cfg, shape_id, n_dp, n_tp, chips):
+    spec = RECSYS_SHAPES[shape_id]
+    kind, b = spec["kind"], spec["batch"]
+    d = cfg.embed_dim
+    s = cfg.seq_len
+    b_dev = max(b // n_dp, 1)
+    enc = cfg.n_blocks * b_dev * s * d * _B32 * 10
+    table_rows = b_dev * s * d * _B32            # gathered embeddings
+    if kind == "train":
+        m = max(int(s * 0.15 * 1.3), 4)
+        logits = 3 * b_dev * m * (cfg.n_items // n_tp) * _B32
+        table_opt = cfg.n_items * d * _B32 * 9 / chips
+        return 3 * enc + table_rows + logits + table_opt
+    if kind == "retrieval":
+        n_cand = spec["n_candidates"]
+        return enc + table_rows + n_cand * d * _B32 / n_tp
+    logits = b_dev * (cfg.n_items // n_tp) * _B32
+    return enc + table_rows + logits
+
+
+def hbm_floor_bytes(bundle, shape_id: str, mesh) -> float:
+    chips = mesh.size
+    n_tp = mesh.shape.get("model", 1)
+    n_dp = chips // n_tp
+    cfg = bundle.cfg
+    if bundle.family == "lm":
+        return float(_lm_floor(cfg, shape_id, n_dp, n_tp, chips))
+    if bundle.family == "gnn":
+        return float(_gnn_floor(cfg, shape_id, n_dp, chips, bundle))
+    return float(_recsys_floor(cfg, shape_id, n_dp, n_tp, chips))

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import
+to build these meshes on a CPU host.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) (data, model) = 256 chips.
+    Multi-pod:  (2, 16, 16) (pod, data, model) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,375 @@
+"""Unified model API: build_bundle(arch) → step functions + input specs for
+every (architecture × shape) cell. Used by the launcher, the multi-pod
+dry-run, smoke tests, and the roofline harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES
+from repro.configs.registry import get_config, shapes_for
+from repro.data import graph_data, recsys_synth
+from repro.models import bert4rec
+from repro.models.gnn_models import GNN_MODELS
+from repro.nn import transformer as T
+from repro.train.optimizer import AdamW
+
+__all__ = ["ModelBundle", "build_bundle", "TRIPLET_CAPS"]
+
+# DimeNet triplet caps per shape (bounds the O(Σdeg²) blow-up; DESIGN.md §4)
+TRIPLET_CAPS = {"full_graph_sm": 8, "minibatch_lg": 8, "ogb_products": 4,
+                "molecule": 16}
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    arch: str
+    cfg: Any
+    family: str
+    init_fn: Callable                     # (key) -> params
+    optimizer: AdamW
+    steps: dict                           # shape_kind -> step callable
+    input_specs: Callable                 # (shape_id) -> dict of SDS
+    make_inputs: Callable                 # (shape_id, scale) -> real arrays
+    state_specs: Callable                 # (shape_id, params_shape) -> extra state SDS
+    model_flops: Callable                 # (shape_id) -> float
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# =============================================================== LM bundles
+def _lm_bundle(arch: str, cfg, reduced: bool) -> ModelBundle:
+    opt = AdamW(lr=3e-4)
+
+    def init_fn(key):
+        return T.lm_init(key, cfg)
+
+    def train_step(params, opt_state, batch):
+        """Microbatched (gradient-accumulation) train step: activation
+        liveness scales with B/grad_accum, grads accumulate in an f32
+        param-shaped buffer that inherits the parameter shardings."""
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        a = cfg.grad_accum if b % max(cfg.grad_accum, 1) == 0 else 1
+        mb = tokens.reshape(a, b // a, tokens.shape[1])
+
+        def micro(carry, tok):
+            gacc, lacc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.lm_loss(p, tok, cfg), has_aux=True)(params)
+            gacc = jax.tree.map(
+                lambda acc, g: acc + g.astype(jnp.float32), gacc, grads)
+            return (gacc, lacc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(
+            micro, (g0, jnp.zeros((), jnp.float32)), mb)
+        grads = jax.tree.map(lambda g: g / a, grads)
+        loss = loss_sum / a
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    def prefill_step(params, batch):
+        return T.lm_prefill_logits(params, batch["tokens"], cfg)
+
+    def decode_step(params, caches, batch):
+        logits, caches = T.lm_decode_step(params, batch["token"], caches,
+                                          batch["lengths"], cfg)
+        return logits, caches
+
+    def shape_dims(shape_id):
+        spec = LM_SHAPES[shape_id]
+        b, s = spec["global_batch"], spec["seq_len"]
+        if reduced:
+            b, s = max(b // 64, 2), min(s, 128)
+        return spec["kind"], b, s
+
+    def input_specs(shape_id):
+        kind, b, s = shape_dims(shape_id)
+        if kind in ("train", "prefill"):
+            return {"tokens": _sds((b, s), jnp.int32)}
+        return {"token": _sds((b,), jnp.int32),
+                "lengths": _sds((b,), jnp.int32)}
+
+    def state_specs(shape_id, params_shape):
+        kind, b, s = shape_dims(shape_id)
+        if kind != "decode":
+            return None
+        caches = jax.eval_shape(
+            lambda: T.lm_init_caches(cfg, b, s, dtype=jnp.bfloat16))
+        return caches
+
+    def make_inputs(shape_id, seed=0):
+        kind, b, s = shape_dims(shape_id)
+        rng = np.random.default_rng(seed)
+        if kind in ("train", "prefill"):
+            return {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (b, s)).astype(np.int32))}
+        return {"token": jnp.asarray(rng.integers(0, cfg.vocab, (b,))
+                                     .astype(np.int32)),
+                "lengths": jnp.asarray(
+                    rng.integers(1, s - 1, (b,)).astype(np.int32))}
+
+    def model_flops(shape_id):
+        kind, b, s = shape_dims(shape_id)
+        n_active = cfg.n_active_params()
+        if kind == "train":
+            return 6.0 * n_active * b * s
+        if kind == "prefill":
+            return 2.0 * n_active * b * s
+        return 2.0 * n_active * b     # decode: one token per row
+
+    return ModelBundle(arch=arch, cfg=cfg, family="lm", init_fn=init_fn,
+                       optimizer=opt,
+                       steps={"train": train_step, "prefill": prefill_step,
+                              "decode": decode_step},
+                       input_specs=input_specs, make_inputs=make_inputs,
+                       state_specs=state_specs, model_flops=model_flops)
+
+
+# ============================================================== GNN bundles
+def _gnn_bundle(arch: str, cfg, reduced: bool) -> ModelBundle:
+    model = GNN_MODELS[cfg.model]
+    opt = AdamW(lr=1e-3)
+    needs_triplets = cfg.model == "dimenet"
+
+    def shape_geom(shape_id):
+        spec = GNN_SHAPES[shape_id]
+        if spec["kind"] == "sampled":
+            from repro.data.sampler import sampled_shape
+            bn = spec["batch_nodes"] if not reduced else 16
+            fo = spec["fanout"] if not reduced else (3, 2)
+            n, e = sampled_shape(bn, fo)
+            d_feat, n_graphs = 128, 1
+        elif spec["kind"] == "batched":
+            b = spec["batch"] if not reduced else 4
+            n = b * spec["n_nodes"]
+            e = b * spec["n_edges"]
+            d_feat, n_graphs = None, b
+        else:
+            n = spec["n_nodes"] if not reduced else 64
+            e = spec["n_edges"] if not reduced else 256
+            d_feat = spec.get("d_feat")
+            if reduced and d_feat:
+                d_feat = min(d_feat, 32)
+            n_graphs = 1
+        if not reduced:
+            # pad node/edge counts to multiples of 4096 so the arrays shard
+            # evenly over any production DP extent (≤512); padded entries are
+            # masked out (node_mask/edge_mask) — standard padding discipline.
+            n = -(-n // 4096) * 4096
+            e = -(-e // 4096) * 4096
+        return n, e, d_feat, n_graphs
+
+    def init_fn_for(shape_id):
+        _, _, d_feat, _ = shape_geom(shape_id)
+        return lambda key: model.init(key, cfg, {"d_feat": d_feat})
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, **metrics}
+
+    def input_specs(shape_id):
+        n, e, d_feat, n_graphs = shape_geom(shape_id)
+        cap = TRIPLET_CAPS[shape_id] if needs_triplets else 0
+        return graph_data.graph_batch_specs(
+            n, e, d_feat, n_graphs=n_graphs,
+            with_triplets=needs_triplets, triplet_cap=cap)
+
+    def make_inputs(shape_id, seed=0):
+        spec = GNN_SHAPES[shape_id]
+        n, e, d_feat, n_graphs = shape_geom(shape_id)
+        cap = TRIPLET_CAPS[shape_id] if needs_triplets else 0
+        if spec["kind"] == "batched":
+            gb = graph_data.molecule_batch(
+                n_graphs, spec["n_nodes"], spec["n_edges"], seed=seed,
+                with_triplets=needs_triplets)
+        elif spec["kind"] == "sampled":
+            from repro.data.sampler import NeighborSampler
+            from repro.core.graph import synthetic_labeled_graph
+            bn = spec["batch_nodes"] if not reduced else 16
+            fo = spec["fanout"] if not reduced else (3, 2)
+            g = synthetic_labeled_graph(
+                spec["n_nodes"] if not reduced else 500, 12.0, 4, seed=seed)
+            smp = NeighborSampler(g.indptr, g.indices, d_feat=d_feat or 128,
+                                  seed=seed)
+            rng = np.random.default_rng(seed)
+            gb = smp.sample(rng.integers(0, g.n, bn), fo)
+            if needs_triplets:
+                gb.triplets = graph_data.build_triplets(gb, cap_per_edge=cap)
+        else:
+            gb = graph_data.synth_full_graph(
+                n, e // 2, d_feat or 16, seed=seed,
+                with_triplets=needs_triplets, triplet_cap_per_edge=cap)
+            # pad/trim symmetrized edges to the spec size
+            gb = _fit_edges(gb, e, needs_triplets, cap)
+        arrs = graph_data.batch_to_arrays(gb)
+        return {k: jnp.asarray(v) for k, v in arrs.items()}
+
+    def state_specs(shape_id, params_shape):
+        return None
+
+    def model_flops(shape_id):
+        n, e, d_feat, _ = shape_geom(shape_id)
+        c = cfg.d_hidden
+        if cfg.model == "gatedgcn":
+            per_edge = 2 * c * c * 3
+            per_node = 2 * c * c * 2
+        elif cfg.model == "nequip":
+            lm = cfg.extra.get("l_max", 2)
+            paths = len(_nequip_paths(lm))
+            per_edge = paths * (2 * c * 9 + 2 * 8 * 32 + 2 * 32 * c)
+            per_node = 2 * c * c * 2 * (lm + 1)
+        elif cfg.model == "equiformer_v2":
+            lm = cfg.extra.get("l_max", 6)
+            n_coef = (lm + 1) ** 2
+            so2 = sum(2 * ((lm + 1 - m) * c) ** 2 * (2 if m else 1)
+                      for m in range(lm + 1))
+            per_edge = so2 + 4 * n_coef * c * (2 * lm + 1)
+            per_node = 2 * c * c * (lm + 1)
+        else:  # dimenet
+            cap = TRIPLET_CAPS[shape_id]
+            nb = cfg.extra.get("n_bilinear", 8)
+            per_edge = cap * (2 * nb * c * c) + 2 * c * c * 3
+            per_node = 2 * c * c
+        return float(cfg.n_layers) * (per_edge * e + per_node * n)
+
+    # init needs per-shape d_feat — expose via init_fn taking shape id too
+    bundle = ModelBundle(arch=arch, cfg=cfg, family="gnn", init_fn=None,
+                         optimizer=opt,
+                         steps={"train": train_step, "full": train_step,
+                                "sampled": train_step, "batched": train_step},
+                         input_specs=input_specs, make_inputs=make_inputs,
+                         state_specs=state_specs, model_flops=model_flops)
+    bundle.init_fn_for = init_fn_for
+    bundle.init_fn = init_fn_for("molecule" if not needs_triplets
+                                 else "molecule")
+    return bundle
+
+
+def _fit_edges(gb, e_target, needs_triplets, cap):
+    e = gb.edge_src.shape[0]
+    if e >= e_target:
+        gb.edge_src = gb.edge_src[:e_target]
+        gb.edge_dst = gb.edge_dst[:e_target]
+        gb.edge_mask = gb.edge_mask[:e_target]
+    else:
+        pad = e_target - e
+        gb.edge_src = np.concatenate([gb.edge_src, np.zeros(pad, np.int32)])
+        gb.edge_dst = np.concatenate([gb.edge_dst, np.zeros(pad, np.int32)])
+        gb.edge_mask = np.concatenate([gb.edge_mask, np.zeros(pad, bool)])
+    if needs_triplets:
+        gb.triplets = graph_data.build_triplets(gb, cap_per_edge=cap)
+    return gb
+
+
+def _nequip_paths(lm):
+    from repro.models.gnn_models import NequIP
+    return NequIP.paths(lm)
+
+
+# =========================================================== recsys bundles
+def _recsys_bundle(arch: str, cfg, reduced: bool) -> ModelBundle:
+    opt = AdamW(lr=1e-3)
+
+    def init_fn(key):
+        return bert4rec.init(key, cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: bert4rec.cloze_loss(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, **metrics}
+
+    def serve_step(params, batch):
+        return bert4rec.score_next(params, batch["ids"], cfg)
+
+    def retrieval_step(params, batch):
+        return bert4rec.score_candidates(params, batch["ids"],
+                                         batch["candidate_ids"], cfg)
+
+    def dims(shape_id):
+        spec = RECSYS_SHAPES[shape_id]
+        b = spec["batch"]
+        if reduced:
+            b = min(b, 8)
+        s = cfg.seq_len
+        return spec["kind"], b, s
+
+    def input_specs(shape_id):
+        kind, b, s = dims(shape_id)
+        if kind == "train":
+            m = max(int(s * 0.15 * 1.3), 4)
+            return {"ids": _sds((b, s), jnp.int32),
+                    "mask_idx": _sds((b, m), jnp.int32),
+                    "mask_targets": _sds((b, m), jnp.int32),
+                    "mask_valid": _sds((b, m), jnp.bool_)}
+        if kind == "retrieval":
+            n_cand = RECSYS_SHAPES[shape_id]["n_candidates"]
+            if reduced:
+                n_cand = min(n_cand, 512)
+            return {"ids": _sds((b, s), jnp.int32),
+                    "candidate_ids": _sds((n_cand,), jnp.int32)}
+        return {"ids": _sds((b, s), jnp.int32)}
+
+    def make_inputs(shape_id, seed=0):
+        kind, b, s = dims(shape_id)
+        if kind == "train":
+            batch = recsys_synth.cloze_batch(b, s, cfg.n_items, seed=seed)
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        out = {"ids": jnp.asarray(
+            recsys_synth.history_batch(b, s, cfg.n_items, seed))}
+        if kind == "retrieval":
+            n_cand = RECSYS_SHAPES[shape_id]["n_candidates"]
+            if reduced:
+                n_cand = min(n_cand, 512)
+            rng = np.random.default_rng(seed)
+            out["candidate_ids"] = jnp.asarray(
+                rng.integers(1, cfg.n_items, (n_cand,)).astype(np.int32))
+        return out
+
+    def state_specs(shape_id, params_shape):
+        return None
+
+    def model_flops(shape_id):
+        kind, b, s = dims(shape_id)
+        d = cfg.embed_dim
+        enc_tok = cfg.n_blocks * (8 * d * d + 2 * 2 * s * d)   # per token
+        logit_row = 2 * d * cfg.n_items                        # per scored row
+        if kind == "train":
+            m = max(int(s * 0.15 * 1.3), 4)
+            return 3.0 * b * (s * enc_tok + m * logit_row)
+        if kind == "retrieval":
+            n_cand = RECSYS_SHAPES[shape_id]["n_candidates"]
+            return b * s * enc_tok + 2.0 * b * n_cand * d
+        return float(b) * (s * enc_tok + logit_row)
+
+    return ModelBundle(arch=arch, cfg=cfg, family="recsys", init_fn=init_fn,
+                       optimizer=opt,
+                       steps={"train": train_step, "serve": serve_step,
+                              "retrieval": retrieval_step},
+                       input_specs=input_specs, make_inputs=make_inputs,
+                       state_specs=state_specs, model_flops=model_flops)
+
+
+def build_bundle(arch: str, *, reduced: bool = False,
+                 override: dict | None = None) -> ModelBundle:
+    cfg = get_config(arch, reduced=reduced)
+    if override:
+        cfg = dataclasses.replace(cfg, **override)
+    if cfg.family == "lm":
+        return _lm_bundle(arch, cfg, reduced)
+    if cfg.family == "gnn":
+        return _gnn_bundle(arch, cfg, reduced)
+    return _recsys_bundle(arch, cfg, reduced)

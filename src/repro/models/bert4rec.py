@@ -1,0 +1,136 @@
+"""BERT4Rec [arXiv:1904.06690]: bidirectional transformer over user item
+sequences, cloze (masked-item) training, dot-product scoring against the
+(vocab-sharded) item table.
+
+The item table is the hot object (n_items = 10⁶ per the retrieval_cand
+shape): lookups route through nn/core.embed, `retrieval_cand` scores one
+query hidden state against all candidates as a single (d) × (d, n_items)
+matmul — no loops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig, RecsysConfig
+from repro.distributed.sharding import constrain
+from repro.nn import core, transformer as T
+
+__all__ = ["bert4rec_encoder_cfg", "init", "cloze_loss", "score_next",
+           "score_candidates"]
+
+MASK_ID = 0   # item id 0 reserved as [MASK]; real items are 1..n_items-1
+
+
+def bert4rec_encoder_cfg(cfg: RecsysConfig) -> LMConfig:
+    d = cfg.embed_dim
+    return LMConfig(name=cfg.name + "-enc", n_layers=cfg.n_blocks, d_model=d,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+                    head_dim=d // cfg.n_heads, d_ff=4 * d,
+                    vocab=cfg.n_items, tie_embeddings=True,
+                    max_seq=cfg.seq_len, q_chunk=cfg.q_chunk,
+                    k_chunk=cfg.k_chunk, rope_frac=1.0, remat=False,
+                    unroll=cfg.unroll)
+
+
+def init(key, cfg: RecsysConfig, dtype=jnp.float32):
+    return T.lm_init(key, bert4rec_encoder_cfg(cfg), dtype=dtype)
+
+
+def _encode(params, ids, cfg: RecsysConfig, dtype):
+    ecfg = bert4rec_encoder_cfg(cfg)
+    return T.encoder_forward(params, ids, ecfg, dtype=dtype)
+
+
+def cloze_loss(params, batch, cfg: RecsysConfig, *, dtype=jnp.float32,
+               batch_chunk: int | None = None):
+    """batch: {ids (B,S), mask_idx (B,M), mask_targets (B,M),
+    mask_valid (B,M)} — masked positions carry item 0 ([MASK]).
+
+    Memory discipline for the 65k-batch × 1M-item regime: (1) logits are
+    computed only at the M≪S masked positions; (2) the CE is chunked over the
+    batch (scan) so only a (chunk·M, V/tp) slab is live; (3) the gold logit is
+    a one-hot einsum (vocab is TP-sharded — see transformer.lm_loss)."""
+    h = _encode(params, batch["ids"], cfg, dtype)
+    hm = jnp.take_along_axis(h, batch["mask_idx"][..., None], axis=1)
+    b, m, d = hm.shape
+    ck = min(batch_chunk or cfg.batch_chunk, b)
+    n_chunks = (b + ck - 1) // ck
+    pad = n_chunks * ck - b
+    hm = jnp.pad(hm, ((0, pad), (0, 0), (0, 0))).reshape(n_chunks, ck, m, d)
+    tm = jnp.pad(batch["mask_targets"], ((0, pad), (0, 0))).reshape(
+        n_chunks, ck, m)
+    vm = jnp.pad(batch["mask_valid"], ((0, pad), (0, 0))).reshape(
+        n_chunks, ck, m)
+    table = params["embed"]["table"]
+
+    def chunk(acc, xs):
+        hc, tc, vc = xs
+        logits = constrain(hc @ table.astype(hc.dtype).T,
+                           "logits_btv").astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = constrain(jax.nn.one_hot(tc, cfg.n_items, dtype=jnp.bfloat16),
+                           "logits_btv")
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot.astype(jnp.float32))
+        return acc + jnp.where(vc, logz - gold, 0.0).sum(), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk),
+                            jnp.zeros((), jnp.float32), (hm, tm, vm))
+    loss = total / jnp.maximum(batch["mask_valid"].sum(), 1)
+    return loss, {"nll": loss}
+
+
+def iterative_top_k(x, k: int):
+    """k passes of (argmax, mask): pure reduce/elementwise ops, so GSPMD
+    keeps every dim sharding intact. XLA's TopK custom-call bitcasts the
+    operand to rank 2, which destroys batch *and* shard-axis partitioning
+    (observed: a 1 TB all-gather in serve_bulk). For k ≤ ~16 this is also
+    compute-cheap (k reduces)."""
+    n = x.shape[-1]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    vals, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)
+        v = jnp.max(x, axis=-1)
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        x = jnp.where(iota == i[..., None], -jnp.inf, x)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def two_stage_top_k(scores, k: int, n_parts: int):
+    """top-k over a vocab-sharded score matrix without gathering it:
+    shard-local iterative top-k (the reshape keeps the part dim on the
+    `model` axis) → tiny (B, parts·k) merge. Identical results to a global
+    top-k; turns the serve_bulk all-gather (≈1 TB/step at 262k×1M) into a
+    few MB (EXPERIMENTS.md §Perf[serve_bulk])."""
+    b, v = scores.shape
+    if n_parts <= 1 or v % n_parts:
+        return jax.lax.top_k(scores, k)
+    sh = constrain(scores.reshape(b, n_parts, v // n_parts), "parts_bpv")
+    lv, li = iterative_top_k(sh, k)                       # local per part
+    gi = (jnp.arange(n_parts, dtype=li.dtype)[None, :, None]
+          * (v // n_parts) + li).reshape(b, n_parts * k)
+    fv, fi = iterative_top_k(lv.reshape(b, n_parts * k), k)
+    return fv, jnp.take_along_axis(gi, fi.astype(jnp.int32), axis=1)
+
+
+def score_next(params, ids, cfg: RecsysConfig, *, dtype=jnp.float32,
+               top_k: int = 10):
+    """Online inference: last-position hidden state vs the full item table."""
+    from repro.distributed.sharding import current_rules
+    h = _encode(params, ids, cfg, dtype)[:, -1]
+    table = params["embed"]["table"].astype(h.dtype)
+    scores = constrain(h @ table.T, "logits_bv")
+    ctx = current_rules()
+    n_parts = ctx[0].shape.get("model", 1) if ctx is not None else 1
+    return two_stage_top_k(scores, top_k, n_parts)
+
+
+def score_candidates(params, ids, candidate_ids, cfg: RecsysConfig, *,
+                     dtype=jnp.float32):
+    """Retrieval scoring: (B,S) history × (N_cand,) candidates → (B, N_cand)
+    as one batched dot against gathered candidate embeddings."""
+    h = _encode(params, ids, cfg, dtype)[:, -1]              # (B, D)
+    cand = core.embed(params["embed"], candidate_ids, dtype=h.dtype)
+    return h @ cand.T

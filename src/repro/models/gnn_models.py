@@ -1,0 +1,341 @@
+"""The four assigned GNN architectures on the shared GraphBatch substrate.
+
+Uniform API per model M:
+  M.init(key, cfg, batch_spec) -> params
+  M.loss(params, batch, cfg)   -> (scalar, metrics)
+Node-classification shapes train on node_labels; geometric models
+(nequip / equiformer_v2 / dimenet) regress per-graph energies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn import core, equivariant as eq, gnn
+
+__all__ = ["GatedGCN", "NequIP", "EquiformerV2", "DimeNet", "GNN_MODELS"]
+
+
+def _edge_vectors(batch):
+    vec = batch["positions"][batch["edge_dst"]] - batch["positions"][batch["edge_src"]]
+    r = jnp.sqrt(jnp.maximum((vec ** 2).sum(-1), 1e-12))
+    return vec, r
+
+
+def _graph_readout(node_scalars, graph_ids, n_graphs, node_mask):
+    vals = jnp.where(node_mask[:, None], node_scalars, 0)
+    return jax.ops.segment_sum(vals, graph_ids, num_segments=n_graphs)
+
+
+# ===================================================================== GatedGCN
+class GatedGCN:
+    """16L d70 gated aggregator [arXiv:2003.00982]."""
+
+    @staticmethod
+    def init(key, cfg, batch_spec):
+        d = cfg.d_hidden
+        d_in = batch_spec.get("d_feat") or 16
+        ks = jax.random.split(key, cfg.n_layers + 4)
+        layers = [gnn.gatedgcn_init(ks[i], d) for i in range(cfg.n_layers)]
+        return {"embed_h": core.dense_init(ks[-4], d_in, d, bias=True),
+                "embed_e": core.dense_init(ks[-3], 1, d, bias=True),
+                "layers": layers,
+                "head": core.dense_init(ks[-2], d,
+                                        cfg.extra.get("n_classes", 16),
+                                        bias=True)}
+
+    @staticmethod
+    def forward(params, batch, cfg):
+        n = batch["node_mask"].shape[0]
+        if "node_feat" in batch:
+            h = core.dense(params["embed_h"], batch["node_feat"])
+        else:
+            d_in = params["embed_h"]["w"].shape[0]
+            h = core.dense(params["embed_h"],
+                           jax.nn.one_hot(batch["species"] % d_in, d_in))
+        _, r = _edge_vectors(batch)
+        e = core.dense(params["embed_e"], r[:, None])
+
+        @jax.checkpoint
+        def layer_fn(lp, h, e):
+            return gnn.gatedgcn_layer(lp, h, e, batch["edge_src"],
+                                      batch["edge_dst"], batch["edge_mask"],
+                                      n)
+
+        for lp in params["layers"]:
+            h, e = layer_fn(lp, h, e)
+        return core.dense(params["head"], h)
+
+    @staticmethod
+    def loss(params, batch, cfg):
+        logits = GatedGCN.forward(params, batch, cfg).astype(jnp.float32)
+        labels = batch["node_labels"] % logits.shape[-1]
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+        nll = jnp.where(batch["node_mask"], logz - gold, 0).sum()
+        nll = nll / jnp.maximum(batch["node_mask"].sum(), 1)
+        return nll, {"nll": nll}
+
+
+# ====================================================================== NequIP
+class NequIP:
+    """E(3)-equivariant interatomic potential [arXiv:2101.03164]:
+    l_max 2, Bessel radial basis, Gaunt tensor-product messages."""
+
+    @staticmethod
+    def init(key, cfg, batch_spec):
+        lm = cfg.extra.get("l_max", 2)
+        c = cfg.d_hidden
+        n_rbf = cfg.extra.get("n_rbf", 8)
+        n_species = cfg.extra.get("n_species", 16)
+        paths = NequIP.paths(lm)
+        ks = iter(jax.random.split(
+            key, 4 + cfg.n_layers * (len(paths) + 2 * (lm + 1))))
+        params = {"embed": core.embedding_init(next(ks), n_species, c),
+                  "layers": []}
+        for _ in range(cfg.n_layers):
+            lp = {"radial": {f"{l1}_{l2}_{l3}":
+                             core.mlp_init(next(ks), (n_rbf, 32, c),
+                                           bias=True)
+                             for (l1, l2, l3) in paths},
+                  "self": {str(l): core.dense_init(next(ks), c, c)
+                           for l in range(lm + 1)},
+                  "mix": {str(l): core.dense_init(next(ks), c, c)
+                          for l in range(lm + 1)}}
+            params["layers"].append(lp)
+        params["head"] = core.mlp_init(next(ks), (c, 32, 1), bias=True)
+        return params
+
+    @staticmethod
+    def paths(lm):
+        out = []
+        for l1 in range(lm + 1):
+            for l2 in range(lm + 1):
+                for l3 in range(abs(l1 - l2), min(l1 + l2, lm) + 1):
+                    if (l1 + l2 + l3) % 2 == 0:   # parity-allowed (Gaunt ≠ 0)
+                        out.append((l1, l2, l3))
+        return out
+
+    @staticmethod
+    def forward(params, batch, cfg):
+        lm = cfg.extra.get("l_max", 2)
+        c = cfg.d_hidden
+        n_rbf = cfg.extra.get("n_rbf", 8)
+        cutoff = cfg.extra.get("cutoff", 5.0)
+        n = batch["node_mask"].shape[0]
+        vec, r = _edge_vectors(batch)
+        rbf = eq.bessel_basis(r, n_rbf, cutoff)              # (E, n_rbf)
+        sh = eq.real_sph_harm(vec, lm)                       # l → (E, 2l+1)
+        feats = {0: core.embed(params["embed"], batch["species"])[:, :, None]}
+        for l in range(1, lm + 1):
+            feats[l] = jnp.zeros((n, c, 2 * l + 1), feats[0].dtype)
+        src, dst = batch["edge_src"], batch["edge_dst"]
+
+        def layer_fn(lp, feats):
+            new = {l: core.dense(lp["self"][str(l)],
+                                 feats[l].transpose(0, 2, 1)).transpose(0, 2, 1)
+                   for l in feats}
+            for (l1, l2, l3) in NequIP.paths(lm):
+                g = jnp.asarray(eq.gaunt_tensor(l1, l2, l3))
+                w = core.mlp(lp["radial"][f"{l1}_{l2}_{l3}"], rbf)   # (E, C)
+                # contract SH with the Gaunt tensor first: (E,m,o) stays
+                # small; the naive 3-operand order materializes (E,C,m,n)
+                sh_g = jnp.einsum("en,mno->emo", sh[l2], g)
+                msg = jnp.einsum("ecm,emo->eco",
+                                 feats[l1][src], sh_g) * w[:, :, None]
+                msg = constrain(msg, "gnn_irreps")
+                agg = jax.ops.segment_sum(
+                    jnp.where(batch["edge_mask"][:, None, None], msg, 0),
+                    dst, num_segments=n)
+                agg = constrain(agg, "gnn_irreps")
+                new[l3] = new[l3] + core.dense(
+                    lp["mix"][str(l3)], agg.transpose(0, 2, 1)).transpose(0, 2, 1)
+            gate = jax.nn.silu(new[0])
+            feats = {0: gate}
+            for l in range(1, lm + 1):
+                feats[l] = new[l] * jax.nn.sigmoid(new[0][..., :1])
+            return {l: constrain(f, "gnn_irreps") for l, f in feats.items()}
+
+        layer_fn = jax.checkpoint(layer_fn)   # bound backward residuals
+        for lp in params["layers"]:
+            feats = layer_fn(lp, feats)
+        energy_per_node = core.mlp(params["head"], feats[0][..., 0])
+        return _graph_readout(energy_per_node, batch["graph_ids"],
+                              batch["energies"].shape[0], batch["node_mask"])
+
+    @staticmethod
+    def loss(params, batch, cfg):
+        pred = NequIP.forward(params, batch, cfg)[:, 0]
+        mse = jnp.mean((pred - batch["energies"]) ** 2)
+        return mse, {"mse": mse}
+
+
+# ================================================================ EquiformerV2
+class EquiformerV2:
+    """Equivariant graph attention via eSCN SO(2) convolutions
+    [arXiv:2306.12059]: per-edge Wigner rotation to the edge frame, per-|m|
+    dense mixing, gated nonlinearity, alpha attention, rotation back."""
+
+    @staticmethod
+    def init(key, cfg, batch_spec):
+        lm = cfg.extra.get("l_max", 6)
+        c = cfg.d_hidden
+        n_species = cfg.extra.get("n_species", 16)
+        ks = iter(jax.random.split(key, 4 + cfg.n_layers * (lm + 4)))
+        params = {"embed": core.embedding_init(next(ks), n_species, c),
+                  "layers": []}
+        for _ in range(cfg.n_layers):
+            params["layers"].append({
+                "so2": eq.SO2Conv.init(next(ks), lm, c, c),
+                "alpha": core.mlp_init(next(ks), (2 * c, c, cfg.extra.get(
+                    "n_heads", 8)), bias=True),
+                "out": {str(l): core.dense_init(next(ks), c, c)
+                        for l in range(lm + 1)},
+            })
+        params["head"] = core.mlp_init(next(ks), (c, c, 1), bias=True)
+        return params
+
+    @staticmethod
+    def forward(params, batch, cfg):
+        lm = cfg.extra.get("l_max", 6)
+        c = cfg.d_hidden
+        n_heads = cfg.extra.get("n_heads", 8)
+        n = batch["node_mask"].shape[0]
+        vec, r = _edge_vectors(batch)
+        alpha_ang, beta_ang = eq.align_to_z_angles(vec)
+        src, dst = batch["edge_src"], batch["edge_dst"]
+        feats = {0: core.embed(params["embed"], batch["species"])[:, :, None]}
+        for l in range(1, lm + 1):
+            feats[l] = jnp.zeros((n, c, 2 * l + 1), feats[0].dtype)
+        def layer_fn(lp, feats):
+            edge_feats = {l: constrain(feats[l][src], "gnn_irreps")
+                          for l in feats}
+            rot = eq.rotate_to_edge_frame(edge_feats, alpha_ang, beta_ang, lm)
+            mixed = eq.SO2Conv.apply(lp["so2"], rot, lm, c)
+            mixed = {l: constrain(f, "gnn_irreps") for l, f in mixed.items()}
+            # gated nonlinearity: scalars gate all l>0
+            gate = jax.nn.sigmoid(mixed[0][..., 0])           # (E, C)
+            mixed = {l: (jax.nn.silu(mixed[l]) if l == 0
+                         else mixed[l] * gate[:, :, None]) for l in mixed}
+            # attention weights from invariant (m=0) channels
+            inv = jnp.concatenate([feats[0][dst][..., 0], mixed[0][..., 0]],
+                                  axis=-1)
+            a = core.mlp(lp["alpha"], inv)                    # (E, heads)
+            a = gnn.segment_softmax(a, dst, n, batch["edge_mask"])
+            a = a.mean(-1)                                    # (E,)
+            mixed = {l: mixed[l] * a[:, None, None] for l in mixed}
+            back = eq.rotate_to_edge_frame(mixed, alpha_ang, beta_ang, lm,
+                                           inverse=True)
+            for l in feats:
+                agg = jax.ops.segment_sum(
+                    jnp.where(batch["edge_mask"][:, None, None], back[l], 0),
+                    dst, num_segments=n)
+                upd = core.dense(lp["out"][str(l)],
+                                 agg.transpose(0, 2, 1)).transpose(0, 2, 1)
+                feats[l] = feats[l] + upd
+            return {l: constrain(f, "gnn_irreps") for l, f in feats.items()}
+
+        layer_fn = jax.checkpoint(layer_fn)
+        for lp in params["layers"]:
+            feats = layer_fn(lp, feats)
+        e_node = core.mlp(params["head"], feats[0][..., 0])
+        return _graph_readout(e_node, batch["graph_ids"],
+                              batch["energies"].shape[0], batch["node_mask"])
+
+    @staticmethod
+    def loss(params, batch, cfg):
+        pred = EquiformerV2.forward(params, batch, cfg)[:, 0]
+        mse = jnp.mean((pred - batch["energies"]) ** 2)
+        return mse, {"mse": mse}
+
+
+# ===================================================================== DimeNet
+class DimeNet:
+    """Directional message passing [arXiv:2003.03123]: Bessel RBF, spherical
+    (radial × Legendre) triplet basis, bilinear interaction."""
+
+    @staticmethod
+    def init(key, cfg, batch_spec):
+        c = cfg.d_hidden
+        n_rbf = cfg.extra.get("n_radial", 6)
+        n_sph = cfg.extra.get("n_spherical", 7)
+        n_bil = cfg.extra.get("n_bilinear", 8)
+        n_species = cfg.extra.get("n_species", 16)
+        ks = iter(jax.random.split(key, 4 + cfg.n_layers * 6))
+        params = {"embed": core.embedding_init(next(ks), n_species, c),
+                  "rbf_proj": core.dense_init(next(ks), n_rbf, c),
+                  "edge_embed": core.mlp_init(next(ks), (3 * c, c), bias=True),
+                  "blocks": []}
+        for _ in range(cfg.n_layers):
+            params["blocks"].append({
+                "rbf_w": core.dense_init(next(ks), n_rbf, c),
+                "sbf_w": core.dense_init(next(ks), n_rbf * n_sph, n_bil),
+                "bilinear": core.normal_init(next(ks), (n_bil, c, c),
+                                             scale=1.0 / np.sqrt(c)),
+                "msg_mlp": core.mlp_init(next(ks), (c, c, c), bias=True),
+                "update": core.mlp_init(next(ks), (c, c), bias=True),
+            })
+        params["head"] = core.mlp_init(next(ks), (c, c, 1), bias=True)
+        return params
+
+    @staticmethod
+    def forward(params, batch, cfg):
+        c = cfg.d_hidden
+        n_rbf = cfg.extra.get("n_radial", 6)
+        n_sph = cfg.extra.get("n_spherical", 7)
+        cutoff = cfg.extra.get("cutoff", 5.0)
+        n = batch["node_mask"].shape[0]
+        src, dst = batch["edge_src"], batch["edge_dst"]
+        vec, r = _edge_vectors(batch)
+        rbf = eq.bessel_basis(r, n_rbf, cutoff)                 # (E, n_rbf)
+        h = core.embed(params["embed"], batch["species"])
+        m = core.mlp(params["edge_embed"],
+                     jnp.concatenate([h[src], h[dst],
+                                      core.dense(params["rbf_proj"], rbf)],
+                                     -1))                       # (E, C)
+        t_kj, t_ji, t_mask = batch["t_kj"], batch["t_ji"], batch["t_mask"]
+        # angle between edge (j→i) and (k→j)
+        v_ji = vec[t_ji]
+        v_kj = -vec[t_kj]
+        cosang = (v_ji * v_kj).sum(-1) / jnp.maximum(
+            jnp.linalg.norm(v_ji, axis=-1) * jnp.linalg.norm(v_kj, axis=-1),
+            1e-9)
+        ang = eq.legendre_poly(jnp.clip(cosang, -1, 1), n_sph - 1)  # (T, n_sph)
+        sbf = (eq.bessel_basis(r[t_kj], n_rbf, cutoff)[:, :, None]
+               * ang[:, None, :]).reshape(-1, n_rbf * n_sph)    # (T, ...)
+        e_count = m.shape[0]
+        m = constrain(m, "gnn_nodes")
+
+        @jax.checkpoint
+        def block_fn(bp, m):
+            m_kj = core.mlp(bp["msg_mlp"], m)[t_kj]             # (T, C)
+            w_s = core.dense(bp["sbf_w"], sbf)                  # (T, n_bil)
+            inter = jnp.einsum("tbd,tb->td",
+                               jnp.einsum("tc,bcd->tbd", m_kj, bp["bilinear"]),
+                               w_s)
+            inter = jnp.where(t_mask[:, None], inter, 0)
+            inter = constrain(inter, "gnn_nodes")
+            agg = jax.ops.segment_sum(inter, t_ji, num_segments=e_count)
+            m = m + core.mlp(bp["update"],
+                             agg * core.dense(bp["rbf_w"], rbf))
+            return constrain(m, "gnn_nodes")
+
+        for bp in params["blocks"]:
+            m = block_fn(bp, m)
+        node_e = gnn.scatter_sum(m, dst, n, batch["edge_mask"])
+        e_node = core.mlp(params["head"], node_e)
+        return _graph_readout(e_node, batch["graph_ids"],
+                              batch["energies"].shape[0], batch["node_mask"])
+
+    @staticmethod
+    def loss(params, batch, cfg):
+        pred = DimeNet.forward(params, batch, cfg)[:, 0]
+        mse = jnp.mean((pred - batch["energies"]) ** 2)
+        return mse, {"mse": mse}
+
+
+GNN_MODELS = {"gatedgcn": GatedGCN, "nequip": NequIP,
+              "equiformer_v2": EquiformerV2, "dimenet": DimeNet}

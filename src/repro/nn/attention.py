@@ -1,0 +1,284 @@
+"""Attention: GQA (flash-style chunked causal for train/prefill, KV-cache
+decode) and MLA (compressed latent attention, absorbed decode path).
+
+Train/prefill attention is an exact online-softmax ("flash") formulation in
+pure JAX — O(S) memory via a two-level scan over query/key blocks — so 32k
+prefill fits without a Pallas dependency; the decode path routes through the
+flash_decode Pallas kernel (kernels/ops.decode_attention).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
+from . import core
+
+__all__ = ["gqa_init", "gqa_attention", "gqa_decode", "mla_init",
+           "mla_attention", "mla_decode", "flash_attention", "init_kv_cache",
+           "mla_init_cache"]
+
+_NEG = -1e30
+
+
+# --------------------------------------------------------------------- flash
+def _flash_block(q, k, v, m, l, acc, mask):
+    """One (qc × kc) block update of the online softmax. q (B,N,G,qc,D),
+    k/v (B,N,kc,D), mask broadcastable to (qc, kc)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bngqd,bnkd->bngqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, _NEG)
+    m_new = jnp.maximum(m, s.max(-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + p.sum(-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bngqk,bnkd->bngqd", p, v.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, *, causal=True, q_chunk=512, k_chunk=1024):
+    """q (B,S,H,D); k,v (B,S,N,D) with H = N·G. Exact, O(S) memory."""
+    b, s, h, d = q.shape
+    n = k.shape[2]
+    g = h // n
+    qc = min(q_chunk, s)
+    kc = min(k_chunk, s)
+    # pad to multiples
+    s_q = ((s + qc - 1) // qc) * qc
+    s_k = ((s + kc - 1) // kc) * kc
+    qp = jnp.pad(q, ((0, 0), (0, s_q - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, s_k - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_k - s), (0, 0), (0, 0)))
+    qb = qp.reshape(b, s_q // qc, qc, n, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = kp.reshape(b, s_k // kc, kc, n, d).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(b, s_k // kc, kc, n, d).transpose(1, 0, 3, 2, 4)
+    kpos = (jnp.arange(s_k) < s).reshape(s_k // kc, kc)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+
+        def k_step(carry, ki_k):
+            m, l, acc = carry
+            ki, kblk, vblk, kvalid = ki_k
+            qpos = qi * qc + jnp.arange(qc)
+            kpos_ = ki * kc + jnp.arange(kc)
+            mask = kvalid[None, :]
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos_[None, :])
+            m, l, acc = _flash_block(qblk, kblk, vblk, m, l, acc, mask)
+            return (m, l, acc), None
+
+        # checkpoint the whole inner KV sweep: naive autodiff of the nested
+        # scan would stash O(S²/qc/kc) per-block softmax residuals (tens of
+        # GB at 4k×4k); rematerializing the sweep in the backward keeps the
+        # flash O(S) memory property.
+        def k_sweep(qblk_):
+            m0 = jnp.full((b, n, g, qc), _NEG, jnp.float32)
+            l0 = jnp.zeros((b, n, g, qc), jnp.float32)
+            a0 = jnp.zeros((b, n, g, qc, d), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                k_step, (m0, l0, a0),
+                (jnp.arange(s_k // kc), kb, vb, kpos))
+            return m, l, acc
+
+        m, l, acc = jax.checkpoint(k_sweep)(qblk)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(s_q // qc), qb))
+    # ob: (nq, B, N, G, qc, D) → (B, S, H, D)
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, s_q, h, d)[:, :s]
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- GQA
+def gqa_init(key, d_model, n_heads, n_kv, head_dim, *, qkv_bias=False,
+             dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": core.dense_init(k1, d_model, n_heads * head_dim, bias=qkv_bias,
+                              dtype=dtype),
+        "wk": core.dense_init(k2, d_model, n_kv * head_dim, bias=qkv_bias,
+                              dtype=dtype),
+        "wv": core.dense_init(k3, d_model, n_kv * head_dim, bias=qkv_bias,
+                              dtype=dtype),
+        "wo": core.dense_init(k4, n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def _qkv(p, x, n_heads, n_kv, head_dim, rope_frac, positions):
+    b, s, _ = x.shape
+    q = core.dense(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = core.dense(p["wk"], x).reshape(b, s, n_kv, head_dim)
+    v = core.dense(p["wv"], x).reshape(b, s, n_kv, head_dim)
+    cos, sin, rot = core.rope_angles(head_dim, positions, frac=rope_frac)
+    q = core.apply_rope(q, cos, sin, rot)
+    k = core.apply_rope(k, cos, sin, rot)
+    return q, k, v
+
+
+def cp_attention(q, k, v, mp: int, *, causal=True):
+    """Blockwise context-parallel attention: queries split into `mp`
+    sequence blocks constrained to the `model` axis; K/V stay whole (GSPMD
+    all-gathers them — cheap for GQA's few KV heads). Gives tp-way division
+    of attention *compute* for archs whose head counts don't divide the TP
+    axis (qwen2 12H, qwen3 kv=4, minicpm3 40H) — see EXPERIMENTS.md
+    §Perf[moe-train]. Memory: one (B, S/mp, H, S) f32 score slab per device.
+    """
+    b, s, h, d = q.shape
+    n = k.shape[2]
+    g = h // n
+    qb = q.reshape(b, mp, s // mp, n, g, d)
+    qb = constrain(qb, "cp_qblocks")
+    scores = jnp.einsum("bmqngd,bsnd->bmqngs", qb.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        qpos = (jnp.arange(mp)[:, None] * (s // mp)
+                + jnp.arange(s // mp)[None, :])          # (mp, s/mp)
+        mask = qpos[..., None] >= jnp.arange(s)[None, None, :]
+        scores = jnp.where(mask[None, :, :, None, None, :], scores, _NEG)
+    pvals = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bmqngs,bsnd->bmqngd", pvals, v.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
+def gqa_attention(p, x, *, n_heads, n_kv, head_dim, rope_frac=1.0,
+                  q_chunk=512, k_chunk=1024, cp_degree=0):
+    positions = jnp.arange(x.shape[1])
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim, rope_frac, positions)
+    q = constrain(q, "q_bshd")
+    k = constrain(k, "kv_bshd")
+    v = constrain(v, "kv_bshd")
+    if cp_degree and x.shape[1] % cp_degree == 0:
+        o = cp_attention(q, k, v, cp_degree)
+    else:
+        o = flash_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                            k_chunk=k_chunk)
+    o = o.reshape(x.shape[0], x.shape[1], n_heads * head_dim)
+    return core.dense(p["wo"], o)
+
+
+def init_kv_cache(batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            }
+
+
+def gqa_decode(p, x, cache, lengths, *, n_heads, n_kv, head_dim,
+               rope_frac=1.0, use_pallas=False):
+    """x (B, 1, D): one new token per row; cache k/v (B, S, N, D);
+    lengths (B,) current cache fill. Returns (y, new_cache)."""
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, n_heads, n_kv, head_dim, rope_frac,
+                           lengths[:, None])
+    # scatter the new kv at position `lengths`
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, lengths].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, lengths].set(v_new[:, 0].astype(cache["v"].dtype))
+    k = constrain(k, "cache_bsnd")
+    v = constrain(v, "cache_bsnd")
+    o = kops.decode_attention(q[:, 0], k, v, lengths + 1,
+                              use_pallas=use_pallas)
+    y = core.dense(p["wo"], o.reshape(b, 1, n_heads * head_dim))
+    return y, {"k": k, "v": v}
+
+
+# ----------------------------------------------------------------------- MLA
+def mla_init(key, cfg, dtype=jnp.float32):
+    """cfg fields: d_model, n_heads, q_lora_rank, kv_lora_rank,
+    qk_nope_head_dim, qk_rope_head_dim, v_head_dim."""
+    ks = jax.random.split(key, 6)
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    return {
+        "wdq": core.dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype=dtype),
+        "q_norm": core.rmsnorm_init(cfg.q_lora_rank, dtype),
+        "wuq": core.dense_init(ks[1], cfg.q_lora_rank, h * (dn + dr), dtype=dtype),
+        "wdkv": core.dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank + dr,
+                                dtype=dtype),
+        "kv_norm": core.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wukv": core.dense_init(ks[3], cfg.kv_lora_rank, h * (dn + dv),
+                                dtype=dtype),
+        "wo": core.dense_init(ks[4], h * dv, cfg.d_model, dtype=dtype),
+    }
+
+
+def _mla_qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    cos, sin, rot = core.rope_angles(dr, positions)
+    q = core.dense(p["wuq"], core.rmsnorm(p["q_norm"], core.dense(p["wdq"], x)))
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = core.apply_rope(q_rope, cos, sin, rot)
+    dkv = core.dense(p["wdkv"], x)
+    c_kv = core.rmsnorm(p["kv_norm"], dkv[..., :cfg.kv_lora_rank])
+    k_rope = dkv[..., cfg.kv_lora_rank:].reshape(b, s, 1, dr)
+    k_rope = core.apply_rope(k_rope, cos, sin, rot)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p, x, cfg, q_chunk=512, k_chunk=1024):
+    """Training path: expand latent KV per head, flash attention."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, jnp.arange(x.shape[1]))
+    kv = core.dense(p["wukv"], c_kv).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+    # pad v to qk head dim so one flash call handles both (cheap, zero cols)
+    o = flash_attention(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                          (0, dn + dr - dv))),
+                        causal=True, q_chunk=q_chunk, k_chunk=k_chunk)
+    o = o[..., :dv].reshape(b, s, h * dv)
+    return core.dense(p["wo"], o)
+
+
+def mla_init_cache(batch, max_len, cfg, dtype=jnp.bfloat16):
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(p, x, cache, lengths, cfg):
+    """Absorbed decode: attention scored in the compressed latent space —
+    the cache stays (B, S, kv_lora + rope) regardless of head count.
+      scores = q_nope·W_uk·c_kv + q_rope·k_rope;  out = (softmax·c_kv)·W_uv
+    Validated against the expanded path in tests/test_models.py."""
+    b = x.shape[0]
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(p, x, cfg, lengths[:, None])
+    bidx = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bidx, lengths].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bidx, lengths].set(
+        kr_new[:, 0, 0].astype(cache["k_rope"].dtype))
+    c_kv = constrain(c_kv, "mla_cache")
+    wukv = p["wukv"]["w"].reshape(r, h, dn + dv)
+    w_uk = wukv[..., :dn]                       # (r, h, dn)
+    w_uv = wukv[..., dn:]                       # (r, h, dv)
+    # absorb: q' (B,h,r)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(dn + dr)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    smax = jnp.arange(c_kv.shape[1])[None, None, :] < (lengths + 1)[:, None, None]
+    scores = jnp.where(smax, scores, _NEG)
+    pvals = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pvals, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    y = core.dense(p["wo"], o.reshape(b, 1, h * dv).astype(x.dtype))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,166 @@
+"""Pure-JAX NN primitives: init, linear, norms, rotary, MLP, embeddings.
+
+Parameters are nested dicts of jnp arrays (pytrees); every layer is a pure
+function `f(params, x, ...)`. No framework dependency — this *is* the
+substrate (flax/optax are not available offline, and the framework builds
+everything it needs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["uniform_init", "normal_init", "dense", "dense_init", "rmsnorm",
+           "rmsnorm_init", "layernorm", "layernorm_init", "rope_angles",
+           "apply_rope", "swiglu", "swiglu_init", "embedding_init", "embed",
+           "embedding_bag", "mlp", "mlp_init", "gelu"]
+
+
+# ----------------------------------------------------------------- init
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def uniform_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    bound = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+def dense_init(key, d_in, d_out, *, bias=False, scale=None, dtype=jnp.float32):
+    kw, kb = jax.random.split(key)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(kw, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"].astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["g"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rotary
+def rope_angles(head_dim: int, positions, base: float = 10000.0,
+                frac: float = 1.0):
+    """Position-driven rotary angles for the first `frac` of head_dim
+    (chatglm3 '2d RoPE' uses frac=0.5). positions: any int array; returns
+    (cos, sin, rot) with cos/sin of shape positions.shape + (rot//2,).
+    Computed on the fly so a 500k-token decode never materializes a
+    (max_seq, rot/2) table."""
+    rot = int(head_dim * frac)
+    rot -= rot % 2
+    if rot == 0:
+        z = jnp.zeros(positions.shape + (0,), jnp.float32)
+        return z, z, 0
+    inv = 1.0 / (base ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, cos, sin, rot: int):
+    """x (..., S, H, D); rotary on dims [0, rot). cos/sin broadcast over the
+    head axis: (..., S, rot/2)."""
+    if rot == 0:
+        return x
+    c = cos[..., :, None, :].astype(x.dtype)
+    si = sin[..., :, None, :].astype(x.dtype)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * c - x2 * si
+    y2 = x2 * c + x1 * si
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1)
+
+
+# ----------------------------------------------------------------- MLP
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, d_model, d_ff, dtype=dtype),
+            "wg": dense_init(k2, d_model, d_ff, dtype=dtype),
+            "wo": dense_init(k3, d_ff, d_model, dtype=dtype)}
+
+
+def swiglu(p, x):
+    return dense(p["wo"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x))
+
+
+def mlp_init(key, dims: Sequence[int], *, bias=True, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {"layers": [dense_init(k, dims[i], dims[i + 1], bias=bias,
+                                  dtype=dtype)
+                       for i, k in enumerate(keys)]}
+
+
+def mlp(p, x, act=gelu, final_act=False):
+    n = len(p["layers"])
+    for i, lp in enumerate(p["layers"]):
+        x = dense(lp, x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ----------------------------------------------------------------- embeddings
+def embedding_init(key, vocab, d, scale=0.02, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * scale}
+
+
+def embed(p, ids, dtype=None):
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def embedding_bag(p, ids, segment_ids, num_segments: int, *, mode="sum",
+                  weights=None, dtype=None):
+    """EmbeddingBag = gather + segment reduce (JAX has no native op; this IS
+    the substrate — kernel_taxonomy §RecSys).
+
+    ids, segment_ids: (nnz,) flat multi-hot indices and their bag ids.
+    """
+    vecs = embed(p, ids, dtype=dtype)
+    if weights is not None:
+        vecs = vecs * weights[:, None].astype(vecs.dtype)
+    out = jax.ops.segment_sum(vecs, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, vecs.dtype),
+                                  segment_ids, num_segments=num_segments)
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    elif mode == "max":
+        out = jax.ops.segment_max(vecs, segment_ids, num_segments=num_segments)
+    return out

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN: top-k routing with per-sequence capacity and
+einsum (GShard/MaxText-style) dispatch.
+
+Distribution story (found via the dry-run, see EXPERIMENTS.md §Perf[moe]):
+a sort-based dispatch argsorts along the *global* token axis, which GSPMD can
+only realize by resharding the whole token stream (collective-dominated).
+The einsum dispatch keeps the batch dim explicit — with activations sharded
+(B→data, E→model) and expert weights sharded (E→model, d→data), dispatch,
+expert GEMMs and combine are all *local*; the only MoE collectives left are
+the router's tiny reductions. Capacity is per sequence (C = cf·S·k/E), the
+standard capacity-factor semantics; over-capacity tokens drop and the Switch
+aux loss keeps drop rates low.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from . import core
+
+__all__ = ["moe_init", "moe_ffn"]
+
+
+def moe_init(key, d_model, d_expert, n_experts, dtype=jnp.float32,
+             pad_to: int = 0):
+    """`pad_to` > n_experts allocates dead expert slots so the expert dim
+    divides the EP axis (granite: 40 experts on a 16-way axis → pad to 48);
+    the router never routes to them (EXPERIMENTS.md §Perf notes)."""
+    e_alloc = max(pad_to, n_experts)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_in = 1.0 / (d_model ** 0.5)
+    scale_out = 1.0 / (d_expert ** 0.5)
+    return {
+        "router": core.dense_init(k1, d_model, n_experts, dtype=dtype),
+        "wi": jax.random.normal(k2, (e_alloc, d_model, d_expert), dtype) * scale_in,
+        "wg": jax.random.normal(k3, (e_alloc, d_model, d_expert), dtype) * scale_in,
+        "wo": jax.random.normal(k4, (e_alloc, d_expert, d_model), dtype) * scale_out,
+    }
+
+
+def moe_ffn(p, x, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, group_size: int = 512):
+    """x (B, S, D) → (y (B, S, D), aux_loss scalar).
+
+    Dispatch groups: the einsum-dispatch cost per token is E·C = cf·G·k — a
+    whole-sequence group (G=S) makes dispatch quadratic in S and ~70× the
+    expert GEMMs for small-expert configs (qwen3's d_ff=768). G=512 keeps the
+    dispatch overhead ~25% of expert compute at this config (see
+    EXPERIMENTS.md §Perf[moe])."""
+    n_alloc = p["wi"].shape[0]          # ≥ n_experts when padded for EP
+    b, s, d = x.shape
+    decode = s == 1
+    if decode:
+        # single-token decode: group over the batch instead of the sequence
+        x = x.transpose(1, 0, 2)
+        b, s = s, b
+    g = min(group_size, s)
+    if s % g:
+        g = s
+    ng = s // g
+    xg = x.reshape(b * ng, g, d)
+    bg = b * ng
+
+    logits = core.dense(p["router"], xg).astype(jnp.float32)   # (BG,G,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, top_k)                    # (BG,G,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(capacity_factor * g * top_k / n_experts), 1)
+
+    oh_e = jax.nn.one_hot(eid, n_alloc, dtype=jnp.float32)    # (BG,G,k,E)
+    # rank of each assignment within (group, expert), position-major
+    flat = oh_e.reshape(bg, g * top_k, n_alloc)
+    ranks = jnp.cumsum(flat, axis=1) - flat                    # exclusive
+    rank_of = (flat * ranks).sum(-1).reshape(bg, g, top_k)
+    keep = rank_of < cap
+    oh_c = jax.nn.one_hot(rank_of.astype(jnp.int32), cap,
+                          dtype=jnp.float32) * keep[..., None]
+
+    disp = jnp.einsum("bske,bskc->bsec", oh_e, oh_c).astype(x.dtype)
+    comb = jnp.einsum("bsk,bske,bskc->bsec", gate.astype(x.dtype),
+                      oh_e.astype(x.dtype), oh_c.astype(x.dtype))
+    disp = constrain(disp, "moe_bsec")
+    comb = constrain(comb, "moe_bsec")
+
+    buf = jnp.einsum("bsd,bsec->becd", xg, disp)               # (BG,E,C,D)
+    buf = constrain(buf, "moe_becd")
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"].astype(buf.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["wi"].astype(buf.dtype))
+    h = constrain(h, "moe_becf")
+    out = jnp.einsum("becf,efd->becd", h, p["wo"].astype(buf.dtype))
+    out = constrain(out, "moe_becd")
+    y = jnp.einsum("becd,bsec->bsd", out, comb).reshape(b, s, d)
+
+    # Switch aux load-balance loss: E · Σ_e f_e · P_e
+    fe = (oh_e[..., :n_experts]
+          * keep[..., None].astype(jnp.float32)).sum((1, 2)) / (g * top_k)
+    pe = probs.mean(1)                                          # (BG,E)
+    aux = n_experts * (fe * pe).sum(-1).mean()
+
+    if decode:
+        y = y.transpose(1, 0, 2)
+    return y, aux

@@ -1,0 +1,246 @@
+"""Transformer stack: pre-norm blocks scanned over stacked layer params
+(compact HLO, remat-friendly), GQA or MLA attention, dense or MoE FFN,
+causal LM head. Also the bidirectional encoder variant used by BERT4Rec.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from . import attention as attn
+from . import core
+from .moe import moe_ffn, moe_init
+
+__all__ = ["lm_init", "lm_forward", "lm_loss", "lm_prefill_logits",
+           "lm_decode_step", "lm_init_caches", "encoder_forward"]
+
+
+def _block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": core.rmsnorm_init(cfg.d_model, dtype),
+         "ln2": core.rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.attention == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.gqa_init(ks[0], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim,
+                                  qkv_bias=cfg.qkv_bias, dtype=dtype)
+    if cfg.moe_experts:
+        p["ffn"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                            dtype, pad_to=cfg.moe_pad_to)
+    else:
+        p["ffn"] = core.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def lm_init(key, cfg, dtype=jnp.float32):
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg, dtype))(block_keys)
+    p = {"embed": core.embedding_init(k_emb, cfg.vocab, cfg.d_model,
+                                      dtype=dtype),
+         "blocks": blocks,
+         "ln_f": core.rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = core.dense_init(k_head, cfg.d_model, cfg.vocab,
+                                    dtype=dtype)
+    return p
+
+
+def _block_apply(cfg, bp, x, aux):
+    y = core.rmsnorm(bp["ln1"], x)
+    if cfg.attention == "mla":
+        attn_out = attn.mla_attention(bp["attn"], y, cfg,
+                                      q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+    else:
+        attn_out = attn.gqa_attention(
+            bp["attn"], y, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_frac=cfg.rope_frac,
+            q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+            cp_degree=cfg.cp_degree)
+    x = x + attn_out
+    x = constrain(x, "act_btd")
+    y = core.rmsnorm(bp["ln2"], x)
+    if cfg.moe_experts:
+        ffn_out, a = moe_ffn(bp["ffn"], y, n_experts=cfg.moe_experts,
+                             top_k=cfg.moe_top_k, group_size=cfg.moe_group)
+        aux = aux + a
+    else:
+        ffn_out = core.swiglu(bp["ffn"], y)
+    x = x + ffn_out
+    return constrain(x, "act_btd"), aux
+
+
+def lm_forward(params, tokens, cfg, *, dtype=jnp.bfloat16):
+    """tokens (B, S) → hidden (B, S, D), aux_loss."""
+    x = core.embed(params["embed"], tokens, dtype=dtype)
+    x = constrain(x, "act_btd")
+    block_fn = partial(_block_apply, cfg)
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    def scan_body(carry, bp):
+        x, aux = carry
+        x, aux = block_fn(bp, x, aux)
+        return (x, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.unroll:    # python loop: full-depth HLO for dry-run cost analysis
+        aux = aux0
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            x, aux = block_fn(bp, x, aux)
+    else:
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux0), params["blocks"])
+    x = core.rmsnorm(params["ln_f"], x)
+    return x, aux
+
+
+def _logits(params, h, cfg):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(h.dtype)
+        out = h @ w.T
+    else:
+        out = core.dense(params["head"], h)
+    return constrain(out, "logits_btv")
+
+
+def _ce_chunk(params, cfg, hc, tc, valid):
+    """Cross entropy on one sequence chunk. Two memory-motivated choices:
+    (1) gold logits via one-hot einsum, not take_along_axis — a gather along
+    the TP-sharded vocab axis would all-gather the full f32 logits;
+    (2) called under jax.checkpoint from a sequence-chunked scan, so only a
+    (B, chunk, V/tp) logits slab is ever live (chunked CE)."""
+    logits = _logits(params, hc, cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = constrain(jax.nn.one_hot(tc, cfg.vocab, dtype=jnp.bfloat16),
+                       "logits_btv")
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot.astype(jnp.float32))
+    return jnp.where(valid, logz - gold, 0.0).sum()
+
+
+def lm_loss(params, tokens, cfg, *, dtype=jnp.bfloat16):
+    """Next-token cross entropy (+ MoE aux), sequence-chunked (O(chunk·V/tp)
+    logits memory instead of O(S·V/tp))."""
+    h, aux = lm_forward(params, tokens, cfg, dtype=dtype)
+    h = h[:, :-1]
+    targets = tokens[:, 1:]
+    b, s, d = h.shape
+    ck = min(getattr(cfg, "loss_chunk", 1024), s)
+    n_chunks = (s + ck - 1) // ck
+    pad = n_chunks * ck - s
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    tp_ = jnp.pad(targets, ((0, 0), (0, pad)))
+    vp = jnp.pad(jnp.ones((b, s), bool), ((0, 0), (0, pad)))
+    hb = hp.reshape(b, n_chunks, ck, d).transpose(1, 0, 2, 3)
+    tb = tp_.reshape(b, n_chunks, ck).transpose(1, 0, 2)
+    vb = vp.reshape(b, n_chunks, ck).transpose(1, 0, 2)
+
+    chunk_fn = jax.checkpoint(partial(_ce_chunk, params, cfg))
+
+    def body(acc, xs):
+        hc, tc, vc = xs
+        return acc + chunk_fn(hc, tc, vc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hb, tb, vb))
+    nll = total / (b * s)
+    return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+def lm_prefill_logits(params, tokens, cfg, *, dtype=jnp.bfloat16):
+    """Serve prefill: logits of the last position only."""
+    h, _ = lm_forward(params, tokens, cfg, dtype=dtype)
+    return _logits(params, h[:, -1:], cfg)
+
+
+# ------------------------------------------------------------------- decode
+def lm_init_caches(cfg, batch, max_len, dtype=jnp.bfloat16):
+    if cfg.attention == "mla":
+        one = attn.mla_init_cache(batch, max_len, cfg, dtype)
+    else:
+        one = attn.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                                 dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def lm_decode_step(params, token, caches, lengths, cfg, *,
+                   dtype=jnp.bfloat16, use_pallas=False):
+    """token (B,) last generated token; caches stacked (L, ...); lengths (B,).
+    Returns (logits (B, V), new_caches)."""
+    x = core.embed(params["embed"], token[:, None], dtype=dtype)
+
+    def body(x, bp_cache):
+        bp, cache = bp_cache
+        y = core.rmsnorm(bp["ln1"], x)
+        if cfg.attention == "mla":
+            a, new_cache = attn.mla_decode(bp["attn"], y, cache, lengths, cfg)
+        else:
+            a, new_cache = attn.gqa_decode(
+                bp["attn"], y, cache, lengths, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_frac=cfg.rope_frac, use_pallas=use_pallas)
+        x = x + a
+        y = core.rmsnorm(bp["ln2"], x)
+        if cfg.moe_experts:
+            f, _ = moe_ffn(bp["ffn"], y, n_experts=cfg.moe_experts,
+                           top_k=cfg.moe_top_k)
+        else:
+            f = core.swiglu(bp["ffn"], y)
+        return x + f, new_cache
+
+    if cfg.unroll:
+        outs = []
+        for i in range(cfg.n_layers):
+            sl = lambda t: t[i]
+            x, nc = body(x, (jax.tree.map(sl, params["blocks"]),
+                             jax.tree.map(sl, caches)))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    h = core.rmsnorm(params["ln_f"], x)
+    return _logits(params, h, cfg)[:, 0], new_caches
+
+
+# ----------------------------------------------------- bidirectional encoder
+def encoder_forward(params, ids, cfg, *, dtype=jnp.float32, positions=None):
+    """Non-causal encoder (BERT4Rec). Same stack, bidirectional attention
+    via flash_attention(causal=False)."""
+    x = core.embed(params["embed"], ids, dtype=dtype)
+
+    def scan_body(carry, bp):
+        x, aux = carry
+        y = core.rmsnorm(bp["ln1"], x)
+        b, s, _ = y.shape
+        cos, sin, rot = core.rope_angles(cfg.head_dim, jnp.arange(s),
+                                         frac=cfg.rope_frac)
+        q = core.dense(bp["attn"]["wq"], y).reshape(b, s, cfg.n_heads,
+                                                    cfg.head_dim)
+        k = core.dense(bp["attn"]["wk"], y).reshape(b, s, cfg.n_kv_heads,
+                                                    cfg.head_dim)
+        v = core.dense(bp["attn"]["wv"], y).reshape(b, s, cfg.n_kv_heads,
+                                                    cfg.head_dim)
+        q = core.apply_rope(q, cos, sin, rot)
+        k = core.apply_rope(k, cos, sin, rot)
+        o = attn.flash_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk,
+                                 k_chunk=cfg.k_chunk)
+        x = x + core.dense(bp["attn"]["wo"],
+                           o.reshape(b, s, cfg.n_heads * cfg.head_dim))
+        y = core.rmsnorm(bp["ln2"], x)
+        x = x + core.swiglu(bp["ffn"], y)
+        return (x, aux), None
+
+    if cfg.unroll:
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            carry, _ = scan_body(carry, bp)
+        x = carry[0]
+    else:
+        (x, _), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                                 params["blocks"])
+    return core.rmsnorm(params["ln_f"], x)

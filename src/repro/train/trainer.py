@@ -1,0 +1,64 @@
+"""Training driver: bundle + data stream + supervisor, single entry point
+used by examples/train_lm.py and launch/train.py."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelBundle, build_bundle
+from repro.runtime.ft import FaultInjector, Supervisor
+from repro.train.optimizer import AdamW
+
+__all__ = ["TrainLoop", "lm_token_stream"]
+
+
+def lm_token_stream(vocab: int, batch: int, seq: int, *, seed: int = 0,
+                    cycle: int = 8):
+    """Deterministic synthetic LM token stream: batch_fn(step) → dict.
+    `cycle` repeats a finite pool of batches so a smoke-training run has
+    learnable structure (memorization → monotone loss). Per-host slice
+    discipline: process_index folds into the seed on multi-host fleets."""
+    base = seed * 1_000_003 + jax.process_index()
+
+    def batch_fn(step: int):
+        rng = np.random.default_rng(base + (step % cycle))
+        return {"tokens": jnp.asarray(
+            rng.integers(0, vocab, (batch, seq)).astype(np.int32))}
+
+    return batch_fn
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    arch: str
+    reduced: bool = True
+    n_steps: int = 20
+    batch: int = 8
+    seq: int = 64
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 5
+    seed: int = 0
+
+    def run(self, *, injector: FaultInjector | None = None,
+            batch_fn: Callable | None = None):
+        bundle = build_bundle(self.arch, reduced=self.reduced)
+        params = bundle.init_fn(jax.random.PRNGKey(self.seed))
+        opt_state = bundle.optimizer.init(params)
+        state = {"params": params, "opt": opt_state}
+        if batch_fn is None:
+            batch_fn = lm_token_stream(bundle.cfg.vocab, self.batch, self.seq,
+                                       seed=self.seed)
+        train = jax.jit(bundle.steps["train"])
+
+        def step_fn(state, batch):
+            p, o, metrics = train(state["params"], state["opt"], batch)
+            return {"params": p, "opt": o}, metrics
+
+        sup = Supervisor(self.ckpt_dir, ckpt_every=self.ckpt_every)
+        return sup.run(state, step_fn, batch_fn, self.n_steps,
+                       injector=injector)

@@ -1,0 +1,78 @@
+"""Property tests for the JAX bitset primitives."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+
+
+@st.composite
+def bitmap(draw):
+    t = draw(st.integers(1, 8))
+    w = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    density = draw(st.floats(0.0, 1.0))
+    bm = (rng.random((t, w, 32)) < density)
+    words = (bm.astype(np.uint32) << np.arange(32, dtype=np.uint32)).sum(
+        axis=2, dtype=np.uint32)
+    return words
+
+
+@settings(max_examples=100, deadline=None)
+@given(bitmap())
+def test_row_popcount(bm):
+    got = np.asarray(bitops.row_popcount(jnp.asarray(bm)))
+    want = np.unpackbits(bm.view(np.uint8), axis=-1).reshape(bm.shape[0], -1).sum(1)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(bitmap(), st.integers(0, 2**31 - 1))
+def test_expand_select_enumerates_all_bits(bm, seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 16))
+    # ground truth row-major (row, bit) pairs
+    want = []
+    for r in range(bm.shape[0]):
+        bits = np.nonzero(np.unpackbits(bm[r].view(np.uint8),
+                                        bitorder="little"))[0]
+        want += [(r, int(b)) for b in np.sort(bits)]
+    got = []
+    start = 0
+    while True:
+        rows, bitpos, valid, total = bitops.expand_select(
+            jnp.asarray(bm), jnp.int32(start), k)
+        assert int(total) == len(want)
+        for r, b, v in zip(np.asarray(rows), np.asarray(bitpos),
+                           np.asarray(valid)):
+            if v:
+                got.append((int(r), int(b)))
+        start += k
+        if start >= len(want):
+            break
+        if len(want) == 0:
+            break
+    assert got == want
+
+
+@settings(max_examples=60, deadline=None)
+@given(bitmap(), st.integers(0, 2**31 - 1))
+def test_clear_bit_rows(bm, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(-1, bm.shape[1] * 32, size=bm.shape[0]).astype(np.int32)
+    got = np.asarray(bitops.clear_bit_rows(jnp.asarray(bm), jnp.asarray(idx)))
+    want = bm.copy()
+    for t, i in enumerate(idx):
+        if i >= 0:
+            want[t, i >> 5] &= ~np.uint32(1 << (i & 31))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_nth_set_bit_exhaustive_small():
+    for word in [0b1, 0b1010, 0xFFFFFFFF, 0x80000001, 0b1100110011]:
+        bits = [b for b in range(32) if word >> b & 1]
+        w = jnp.full((len(bits),), word, jnp.uint32)
+        r = jnp.arange(len(bits), dtype=jnp.int32)
+        got = np.asarray(bitops.nth_set_bit(w, r))
+        np.testing.assert_array_equal(got, np.array(bits))

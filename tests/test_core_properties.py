@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) for the CEMR core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_graph, cemr_match, synthetic_labeled_graph, random_walk_query
+from repro.core.count import injective_count, _partitions
+from repro.core.filtering import build_candidate_space, pack_bitmap_adjacency
+from repro.core.oracle import nx_count
+
+
+# ---------------------------------------------------------------- strategies
+@st.composite
+def small_graph_pair(draw):
+    n = draw(st.integers(12, 28))
+    n_labels = draw(st.integers(1, 3))
+    density = draw(st.floats(0.1, 0.35))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    m = max(n, int(density * n * (n - 1) / 2))
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    labels = rng.integers(0, n_labels, size=n)
+    data = build_graph(n, np.stack([src, dst], 1), labels, n_labels=n_labels)
+    qsize = draw(st.integers(3, 5))
+    try:
+        query = random_walk_query(data, qsize, seed=seed ^ 0xABCDEF)
+    except RuntimeError:
+        query = None
+    return query, data
+
+
+@settings(max_examples=25, deadline=None)
+@given(small_graph_pair(),
+       st.sampled_from(["cost", "all_black", "all_white", "case12"]))
+def test_count_matches_oracle(pair, encoding):
+    query, data = pair
+    if query is None:
+        return
+    expect = nx_count(query, data)
+    res = cemr_match(query, data, encoding=encoding, limit=10**9)
+    assert res.count == expect
+
+
+@settings(max_examples=15, deadline=None)
+@given(small_graph_pair())
+def test_all_flag_combos_agree(pair):
+    query, data = pair
+    if query is None:
+        return
+    counts = set()
+    for cer in (True, False):
+        for cv in (True, False):
+            for fs in (True, False):
+                r = cemr_match(query, data, use_cer=cer, use_cv=cv, use_fs=fs,
+                               limit=10**9)
+                counts.add(r.count)
+    assert len(counts) == 1
+
+
+# --------------------------------------------------- injective_count oracle
+@st.composite
+def label_group_sets(draw):
+    k = draw(st.integers(1, 4))
+    universe = draw(st.integers(3, 8))
+    sets = []
+    for _ in range(k):
+        members = draw(st.lists(st.integers(0, universe - 1), min_size=1,
+                                max_size=universe, unique=True))
+        sets.append(np.array(sorted(members), dtype=np.int64))
+    return sets
+
+
+def brute_injective(sets):
+    import itertools
+    c = 0
+    for combo in itertools.product(*[s.tolist() for s in sets]):
+        if len(set(combo)) == len(combo):
+            c += 1
+    return c
+
+
+@settings(max_examples=200, deadline=None)
+@given(label_group_sets())
+def test_injective_count_matches_bruteforce(sets):
+    assert injective_count(sets) == brute_injective(sets)
+
+
+def test_partition_counts_are_bell_numbers():
+    assert [len(_partitions(k)) for k in range(1, 7)] == [1, 2, 5, 15, 52, 203]
+
+
+# ------------------------------------------------------- bitmap consistency
+@settings(max_examples=20, deadline=None)
+@given(small_graph_pair())
+def test_bitmap_pack_roundtrip(pair):
+    query, data = pair
+    if query is None:
+        return
+    cs = build_candidate_space(query, data)
+    bms = pack_bitmap_adjacency(cs)
+    for (u, w), rows in cs.adj.items():
+        bm = bms[(u, w)]
+        for c, row in enumerate(rows):
+            got = []
+            for j in range(bm.shape[1]):
+                word = int(bm[c, j])
+                for b in range(32):
+                    if word >> b & 1:
+                        got.append(32 * j + b)
+            assert got == sorted(row.tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(small_graph_pair())
+def test_candidate_space_sound(pair):
+    """Filtering must never drop a vertex that appears in some embedding."""
+    query, data = pair
+    if query is None:
+        return
+    from repro.core.oracle import nx_embeddings
+    cs = build_candidate_space(query, data)
+    for m in nx_embeddings(query, data):
+        for u, v in m.items():
+            assert cs.index_of(u, v) >= 0, (u, v)

@@ -1,0 +1,89 @@
+"""Multi-device *execution* tests (not just lowering): run real sharded
+train/serve steps on 8 faked host devices in a subprocess (XLA device count
+must be set before jax initializes, hence the subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import policy
+    from repro.distributed.sharding import sharding_ctx
+    from repro.models.api import build_bundle
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    out = {}
+
+    # ---- sharded LM train: loss decreases, params sharded ----
+    bundle = build_bundle("qwen2-1.5b", reduced=True)
+    rules = policy.activation_rules(bundle.cfg, mesh, "train", batch=8)
+    params = bundle.init_fn(jax.random.PRNGKey(0))
+    opt = bundle.optimizer.init(params)
+    pspecs = policy.param_pspecs(jax.eval_shape(lambda: params),
+                                 bundle.cfg, mesh)
+    shard = jax.tree.map(lambda q: NamedSharding(mesh, q), pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    params = jax.device_put(params, shard)
+    opt = jax.device_put(opt, {"m": shard, "v": shard,
+                               "step": NamedSharding(mesh, P())})
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, bundle.cfg.vocab, (8, 64)).astype(np.int32))}
+    with sharding_ctx(mesh, rules):
+        step = jax.jit(bundle.steps["train"], donate_argnums=(0, 1))
+        losses = []
+        for i in range(6):
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+    out["losses"] = losses
+    ffn = params["blocks"]["ffn"]["wi"]["w"]
+    out["ffn_sharded"] = not ffn.sharding.is_fully_replicated
+    out["n_devices"] = len(jax.devices())
+
+    # ---- sharded recsys serve: two-stage top-k correctness under pjit ----
+    b2 = build_bundle("bert4rec", reduced=True)
+    # reduced n_items=500 is not divisible by model=2 -> use full-vocab-like
+    from repro.config import RecsysConfig
+    import repro.models.bert4rec as b4
+    cfg = RecsysConfig(name="t", embed_dim=16, n_blocks=1, n_heads=2,
+                       seq_len=12, n_items=512)
+    p = b4.init(jax.random.PRNGKey(1), cfg)
+    ids = jnp.asarray(rng.integers(1, 512, (8, 12)).astype(np.int32))
+    rules2 = policy.activation_rules(cfg, mesh, "serve", batch=8)
+    with sharding_ctx(mesh, rules2):
+        v_sh, i_sh = jax.jit(
+            lambda pp, xx: b4.score_next(pp, xx, cfg))(p, ids)
+    v_ref, i_ref = b4.score_next(p, ids, cfg)   # unsharded reference
+    out["topk_match"] = bool(jnp.allclose(v_sh, v_ref, atol=1e-4)
+                             and jnp.all(i_sh == i_ref))
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_execution_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["n_devices"] == 8
+    assert out["ffn_sharded"] is True
+    assert out["losses"][-1] < out["losses"][0]       # actually training
+    assert all(np.isfinite(x) for x in out["losses"])
+    assert out["topk_match"] is True

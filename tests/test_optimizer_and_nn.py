@@ -1,0 +1,177 @@
+"""Unit tests: optimizer vs numpy reference, flash attention vs naive,
+MLA absorbed decode vs expanded, MoE routing invariants, embedding bag."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import attention as attn
+from repro.nn import core
+from repro.nn.moe import moe_ffn, moe_init
+from repro.train.optimizer import AdamW, cosine_schedule
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_matches_numpy_reference():
+    opt = AdamW(lr=0.01, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.1,
+                clip_norm=None)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    state = opt.init(p)
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+    # numpy reference
+    m = np.zeros((2, 2)); v = np.zeros((2, 2)); w = np.asarray(p["w"])
+    for step in range(1, 4):
+        p, state, _ = opt.update(g, state, p)
+        gn = np.asarray(g["w"])
+        m = 0.9 * m + 0.1 * gn
+        v = 0.999 * v + 0.001 * gn * gn
+        mh = m / (1 - 0.9 ** step)
+        vh = v / (1 - 0.999 ** step)
+        w = w - 0.01 * (mh / (np.sqrt(vh) + 1e-8) + 0.1 * w)
+    np.testing.assert_allclose(np.asarray(p["w"]), w, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < 1e-4
+    assert float(lr(55)) < float(lr(11))
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("b,s,h,n,d", [(2, 64, 4, 2, 16), (1, 37, 6, 6, 8),
+                                       (2, 128, 8, 1, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_naive(b, s, h, n, d, causal):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, n, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, n, d)), jnp.float32)
+    got = attn.flash_attention(q, k, v, causal=causal, q_chunk=16, k_chunk=32)
+    # naive reference
+    g = h // n
+    qg = q.reshape(b, s, n, g, d)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k) / np.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, -1)
+    want = jnp.einsum("bngst,btnd->bsngd", p, v).reshape(b, s, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_grad_matches_naive():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+
+    def f_flash(q):
+        return attn.flash_attention(q, k, v, causal=True, q_chunk=8,
+                                    k_chunk=8).sum()
+
+    def f_naive(q):
+        s = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(8)
+        mask = jnp.tril(jnp.ones((32, 32), bool))
+        p = jax.nn.softmax(jnp.where(mask[None, None], s, -1e30), -1)
+        return jnp.einsum("bhst,bthd->bshd", p, v).sum()
+
+    g1 = jax.grad(f_flash)(q)
+    g2 = jax.grad(f_naive)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=3e-5)
+
+
+# -------------------------------------------------------------- MLA absorbed
+def test_mla_absorbed_decode_matches_expanded():
+    """The absorbed (latent-space) decode must equal expand-then-attend."""
+    from repro.configs.minicpm3_4b import reduced
+    cfg = reduced()
+    key = jax.random.PRNGKey(0)
+    p = attn.mla_init(key, cfg)
+    b, s_ctx = 2, 9
+    rng = np.random.default_rng(2)
+    # build a cache by running decode steps; compare final step vs train path
+    x_seq = jnp.asarray(rng.standard_normal((b, s_ctx + 1, cfg.d_model)),
+                        jnp.float32)
+    # train path: full attention over the prefix, take last position
+    full = attn.mla_attention(p, x_seq, cfg, q_chunk=16, k_chunk=16)
+    want = full[:, -1:]
+    # decode path: feed tokens one by one
+    cache = attn.mla_init_cache(b, s_ctx + 1, cfg, dtype=jnp.float32)
+    for t in range(s_ctx + 1):
+        lengths = jnp.full((b,), t, jnp.int32)
+        y, cache = attn.mla_decode(p, x_seq[:, t:t + 1], cache, lengths, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=2e-4)
+
+
+def test_gqa_decode_matches_prefix_attention():
+    cfgd = dict(n_heads=4, n_kv=2, head_dim=16)
+    key = jax.random.PRNGKey(3)
+    p = attn.gqa_init(key, 32, 4, 2, 16)
+    rng = np.random.default_rng(4)
+    b, s_ctx = 2, 7
+    x_seq = jnp.asarray(rng.standard_normal((b, s_ctx + 1, 32)), jnp.float32)
+    full = attn.gqa_attention(p, x_seq, n_heads=4, n_kv=2, head_dim=16,
+                              q_chunk=4, k_chunk=4)
+    want = full[:, -1:]
+    cache = attn.init_kv_cache(b, s_ctx + 1, 2, 16, dtype=jnp.float32)
+    for t in range(s_ctx + 1):
+        lengths = jnp.full((b,), t, jnp.int32)
+        y, cache = attn.gqa_decode(p, x_seq[:, t:t + 1], cache, lengths,
+                                   **cfgd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=2e-4)
+
+
+# --------------------------------------------------------------------- MoE
+def test_moe_routes_and_balances():
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, 32, 16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y, aux = moe_ffn(p, x, n_experts=8, top_k=2, group_size=32)
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
+    assert float(aux) > 0
+    # zero input → zero output (experts are linear in x up to silu gating)
+    y0, _ = moe_ffn(p, jnp.zeros_like(x), n_experts=8, top_k=2, group_size=32)
+    assert float(jnp.abs(y0).max()) == 0.0
+
+
+def test_moe_decode_batch_grouping():
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, 16, 8, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, 16))
+    y, _ = moe_ffn(p, x, n_experts=4, top_k=2)
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
+
+
+# ------------------------------------------------------------ embedding bag
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 20), st.integers(0, 2**31 - 1),
+       st.sampled_from(["sum", "mean", "max"]))
+def test_embedding_bag_matches_loops(n_bags, vocab, seed, mode):
+    rng = np.random.default_rng(seed)
+    d = 4
+    p = {"table": jnp.asarray(rng.standard_normal((vocab, d)), jnp.float32)}
+    nnz = int(rng.integers(1, 16))
+    ids = rng.integers(0, vocab, nnz)
+    segs = np.sort(rng.integers(0, n_bags, nnz))
+    got = np.asarray(core.embedding_bag(
+        p, jnp.asarray(ids), jnp.asarray(segs), n_bags, mode=mode))
+    table = np.asarray(p["table"])
+    for b in range(n_bags):
+        rows = table[ids[segs == b]]
+        if rows.shape[0] == 0:
+            want = np.zeros(d) if mode != "max" else got[b]  # segment_max empty
+            if mode != "max":
+                np.testing.assert_allclose(got[b], want, atol=1e-6)
+            continue
+        if mode == "sum":
+            want = rows.sum(0)
+        elif mode == "mean":
+            want = rows.mean(0)
+        else:
+            want = rows.max(0)
+        np.testing.assert_allclose(got[b], want, rtol=1e-5, atol=1e-6)

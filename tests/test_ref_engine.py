@@ -1,0 +1,124 @@
+"""Correctness of the paper-faithful reference engine vs the networkx oracle,
+across encodings and feature flags — the core reproduction gate."""
+import numpy as np
+import pytest
+
+from repro.core import (build_graph, cemr_match, random_walk_query,
+                        synthetic_labeled_graph)
+from repro.core.oracle import nx_count, nx_embeddings
+
+ENCODINGS = ["cost", "all_black", "all_white", "case12"]
+
+
+def fig1_graphs():
+    """The paper's running example (Figure 1)."""
+    data = build_graph(
+        12,
+        [(0, 1), (0, 2), (0, 3), (0, 7), (0, 8), (1, 2), (1, 3), (1, 7),
+         (1, 8), (2, 4), (2, 5), (2, 6), (3, 6), (4, 9), (5, 10), (5, 9),
+         (6, 10), (8, 10), (8, 11), (9, 11), (10, 11), (7, 2), (8, 3)],
+        # labels: A=0 B=1 C=2 D=3 E=4
+        [0, 1, 2, 2, 3, 3, 3, 4, 4, 0, 0, 1],
+    )
+    query = build_graph(
+        7,
+        [(0, 1), (0, 2), (0, 4), (1, 2), (1, 4), (2, 3), (3, 5), (4, 5),
+         (4, 6), (5, 6)],
+        [0, 1, 2, 3, 4, 0, 1],
+    )
+    return query, data
+
+
+@pytest.mark.parametrize("encoding", ENCODINGS)
+def test_fig1_example(encoding):
+    query, data = fig1_graphs()
+    expect = nx_count(query, data)
+    assert expect >= 1        # the paper's documented embedding exists
+    res = cemr_match(query, data, encoding=encoding)
+    assert res.count == expect
+
+
+@pytest.mark.parametrize("encoding", ENCODINGS)
+@pytest.mark.parametrize("seed", range(8))
+def test_random_graphs_all_encodings(encoding, seed):
+    data = synthetic_labeled_graph(60, 5.0, 3, seed=seed, power_law=False)
+    query = random_walk_query(data, 5, seed=seed + 100)
+    expect = nx_count(query, data)
+    res = cemr_match(query, data, encoding=encoding, limit=10**9)
+    assert res.count == expect, f"encoding={encoding} seed={seed}"
+
+
+@pytest.mark.parametrize("flags", [
+    dict(use_cer=False), dict(use_cv=False), dict(use_fs=False),
+    dict(use_cer=False, use_cv=False, use_fs=False),
+])
+@pytest.mark.parametrize("seed", range(4))
+def test_flag_ablations_preserve_counts(flags, seed):
+    data = synthetic_labeled_graph(50, 6.0, 3, seed=seed, power_law=False)
+    query = random_walk_query(data, 6, seed=seed + 17)
+    expect = nx_count(query, data)
+    res = cemr_match(query, data, limit=10**9, **flags)
+    assert res.count == expect
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_materialized_embeddings_match_oracle(seed):
+    data = synthetic_labeled_graph(40, 4.0, 3, seed=seed, power_law=False)
+    query = random_walk_query(data, 4, seed=seed + 5)
+    want = {tuple(sorted(m.items())) for m in nx_embeddings(query, data)}
+    res = cemr_match(query, data, materialize=True, limit=10**9)
+    got = {tuple(sorted(m.items())) for m in res.embeddings}
+    assert got == want
+    # every materialized embedding is a valid monomorphism
+    for m in res.embeddings:
+        assert len(set(m.values())) == query.n
+        for u in range(query.n):
+            assert data.labels[m[u]] == query.labels[u]
+        for u in range(query.n):
+            for w in query.neighbors(u):
+                assert data.has_edge(m[u], int(m[int(w)]))
+
+
+@pytest.mark.parametrize("heur", ["cemr", "ri", "gql"])
+def test_alternative_orders(heur):
+    data = synthetic_labeled_graph(60, 5.0, 3, seed=3, power_law=False)
+    query = random_walk_query(data, 6, seed=11)
+    expect = nx_count(query, data)
+    res = cemr_match(query, data, order_heuristic=heur, limit=10**9)
+    assert res.count == expect
+
+
+def test_limit_and_budget():
+    data = synthetic_labeled_graph(80, 8.0, 2, seed=0, power_law=False)
+    query = random_walk_query(data, 4, seed=2)
+    full = cemr_match(query, data, limit=10**9)
+    assert full.count > 10
+    capped = cemr_match(query, data, limit=10)
+    assert capped.count == 10
+    budget = cemr_match(query, data, step_budget=3, limit=10**9)
+    assert budget.timed_out
+
+
+def test_directed_edge_labeled():
+    data = synthetic_labeled_graph(60, 6.0, 2, seed=1, power_law=False,
+                                   directed=True, n_edge_labels=2)
+    query = random_walk_query(data, 4, seed=9)
+    expect = nx_count(query, data)
+    res = cemr_match(query, data, limit=10**9)
+    assert res.count == expect
+
+
+def test_cer_reduces_intersections():
+    """Fig. 10b claim: CER saves extension computations."""
+    data = synthetic_labeled_graph(120, 6.0, 2, seed=4, power_law=False)
+    saved_any = False
+    for s in range(6):
+        query = random_walk_query(data, 6, seed=40 + s)
+        on = cemr_match(query, data, use_cer=True, limit=10**9)
+        off = cemr_match(query, data, use_cer=False, limit=10**9)
+        assert on.count == off.count
+        assert on.stats.intersections <= off.stats.intersections
+        if on.stats.ceb_hits > 0:
+            saved_any = True
+            assert on.stats.intersections < off.stats.intersections
+    assert saved_any
