@@ -1,0 +1,10 @@
+.PHONY: verify test bench
+
+verify:
+	bash scripts/ci.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run

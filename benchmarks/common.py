@@ -1,17 +1,15 @@
 """Shared benchmark workloads: synthetic stand-ins for the paper's datasets
 (Table 2 statistics), the paper's random-walk query generator, timing
 helpers, and the method matrix (CEMR + ablated variants + the vectorized
-engine)."""
+engine). Execution goes through the `repro.api` session facade — one Matcher
+per data graph, so preprocessing and compiled plans are amortized the way the
+paper's §7.1.2 protocol (thousands of queries per graph) amortizes them."""
 from __future__ import annotations
 
-import time
+from collections import OrderedDict
 
-import numpy as np
-
-from repro.core.graph import (DATASET_STATS, random_walk_query,
-                              synthetic_dataset)
-from repro.core.ref_engine import cemr_match
-from repro.core.engine import vector_match
+from repro.api import Dataset, Matcher, MatchOptions
+from repro.core.graph import random_walk_query, synthetic_dataset
 
 # CI-speed scale: |V| scaled down, structure preserved (power-law, labels).
 DEFAULT_SCALE = 0.03
@@ -49,26 +47,40 @@ METHODS = {
     "no_prune": dict(use_cv=False, use_fs=False),
 }
 
+# one Matcher per data graph: the session object the facade is built around.
+# LRU-bounded — each figure builds fresh Graph objects, and a cached Matcher
+# pins the graph plus all its compiled plans/engines in memory.
+_MATCHERS: OrderedDict[int, Matcher] = OrderedDict()
+_MATCHERS_MAX = 8
+
+
+def matcher_for(data) -> Matcher:
+    m = _MATCHERS.get(id(data))
+    if m is None or m.dataset.graph is not data:
+        m = Matcher(Dataset.from_graph(data))
+        _MATCHERS[id(data)] = m
+        while len(_MATCHERS) > _MATCHERS_MAX:
+            _MATCHERS.popitem(last=False)
+    else:
+        _MATCHERS.move_to_end(id(data))
+    return m
+
 
 def run_method(method: str, query, data, *, limit=100_000, step_budget=None,
                order_heuristic="cemr"):
+    m = matcher_for(data)
     if method == "vector":
-        # warm measurement: build plan + compile once, time the second run
-        # (per-plan jit churn is a shape-bucketing problem, not enumeration
-        # cost — see EXPERIMENTS.md §Perf[cemr-engine])
-        from repro.core.ref_engine import preprocess
-        from repro.core.engine import VectorEngine
-        cs, an = preprocess(query, data)
-        if any(c.shape[0] == 0 for c in cs.cand):
-            return 0, 0.0, vector_match(query, data, limit=1)
-        eng = VectorEngine(cs, an, tile_rows=2048)
-        eng.run(limit=limit)
-        t0 = time.perf_counter()
-        res = eng.run(limit=limit)
-        return res.count, time.perf_counter() - t0, res
+        # warm measurement: compile plan + jit once (plan-cache hit on the
+        # second call), time the warm run — per-plan jit churn is a
+        # shape-bucketing problem, not enumeration cost (EXPERIMENTS.md
+        # §Perf[cemr-engine])
+        opts = MatchOptions(engine="vector", tile_rows=2048, limit=limit)
+        m.count(query, opts)
+        res = m.count(query, opts)
+        return res.count, res.elapsed_s, res
     kw = dict(METHODS[method])
     kw.setdefault("order_heuristic", order_heuristic)
-    res = cemr_match(query, data, limit=limit, step_budget=step_budget, **kw)
+    res = m.count(query, engine="ref", limit=limit, budget=step_budget, **kw)
     return res.count, res.elapsed_s, res
 
 

@@ -140,6 +140,38 @@ def fig11_lsqb(scales=(0.02, 0.04, 0.08), limit=50_000):
     return rows
 
 
+def fig15_session(scale=0.05, limit=20_000, rounds=3):
+    """Session amortization (repro.api): per-query latency against one
+    Dataset with a cold vs warm plan cache. The paper's §7.1.2 protocol
+    re-queries one data graph thousands of times — the warm rows show what
+    the Matcher's compiled-plan reuse buys over per-call preprocessing."""
+    import time
+
+    from repro.api import Dataset, Matcher, MatchOptions
+
+    rows = []
+    data = load_datasets(scale, names=["yeast"])["yeast"]
+    matcher = Matcher(Dataset.from_graph(data, name="yeast"),
+                      MatchOptions(engine="ref", limit=limit))
+    queries = [q for _, q in make_queries(data, sizes=(4, 6), per_size=3)]
+
+    t0 = time.perf_counter()
+    for q in queries:
+        matcher.count(q)                     # cold: compiles every plan
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for q in queries:
+            matcher.count(q)                 # warm: plan-cache hits
+    warm = (time.perf_counter() - t0) / max(rounds, 1)
+    info = matcher.cache_info()
+    rows.append(bench_row("fig15.cold", cold / max(len(queries), 1),
+                          f"misses={info.misses}"))
+    rows.append(bench_row("fig15.warm", warm / max(len(queries), 1),
+                          f"hits={info.hits}"))
+    return rows
+
+
 def fig14_eps(scale=0.05, limit=1_000_000):
     """Fig 14: embeddings per second. Uses a result-dense workload (the
     regime the paper's EPS plot emphasizes: CEM's batched leaves dominate

@@ -29,6 +29,7 @@ def main() -> None:
         "fig10": lambda: paper_figs.fig10_ablations(scale=scale),
         "fig11": lambda: paper_figs.fig11_lsqb(),
         "fig14": lambda: paper_figs.fig14_eps(scale=max(scale, 0.05)),
+        "fig15": lambda: paper_figs.fig15_session(scale=max(scale, 0.05)),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -6,7 +6,7 @@ experimental protocol, §7.1.2) through the fault-tolerant work-queue runtime.
 import argparse
 import time
 
-from repro.core.graph import random_walk_query, synthetic_dataset
+from repro.api import Dataset
 from repro.runtime.queue import MatchQueueRuntime
 
 
@@ -17,14 +17,16 @@ def main():
     ap.add_argument("--n-queries", type=int, default=20)
     ap.add_argument("--query-size", type=int, default=6)
     ap.add_argument("--limit", type=int, default=100_000)
+    ap.add_argument("--engine", default="vector",
+                    choices=["ref", "vector", "auto"])
     args = ap.parse_args()
 
-    data = synthetic_dataset(args.dataset, scale=args.scale)
-    print(f"data graph: |V|={data.n} |E|={data.n_edges}")
-    queries = [random_walk_query(data, args.query_size, seed=s)
+    dataset = Dataset.synthetic(args.dataset, scale=args.scale)
+    print(f"data graph: {dataset!r}")
+    queries = [dataset.random_query(args.query_size, seed=s)
                for s in range(args.n_queries)]
 
-    rt = MatchQueueRuntime(data, tile_rows=2048,
+    rt = MatchQueueRuntime(dataset, engine=args.engine, tile_rows=2048,
                            state_path="/tmp/cemr_queue.json")
     rt.submit(queries, limit=args.limit)
     t0 = time.time()
@@ -33,6 +35,7 @@ def main():
     total = sum(c for c in results.values() if c)
     print(f"{len(results)} queries in {dt:.2f}s — {total} embeddings")
     print(f"runtime stats: {rt.stats}")
+    print(f"plan cache: {rt.matcher.cache_info()}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,10 @@
-"""Quickstart: match a query graph against a data graph with CEMR.
+"""Quickstart: match a query graph against a data graph with CEMR through
+the `repro.api` session layer (Dataset / MatchOptions / Matcher).
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import build_graph, cemr_match, synthetic_labeled_graph, \
-    random_walk_query
-from repro.core.engine import vector_match
+from repro.api import Dataset, MatchOptions, Matcher
+from repro.core import build_graph, random_walk_query, synthetic_labeled_graph
 
 
 def main():
@@ -22,23 +20,29 @@ def main():
             (4, 6), (5, 6)],
         [0, 1, 2, 3, 4, 0, 1])
 
-    res = cemr_match(query, data, materialize=True)
-    print(f"[paper Fig.1] embeddings: {res.count}")
-    for m in res.embeddings:
+    dataset = Dataset.from_graph(data, name="fig1")
+    matcher = Matcher(dataset)                       # engine="auto"
+    out = matcher.count(query)
+    print(f"[paper Fig.1] embeddings: {out.count} (engine={out.engine})")
+    for m in matcher.stream(query):                  # explicit embeddings
         print("  ", {f"u{k}": f"v{v}" for k, v in sorted(m.items())})
-    print(f"  stats: {res.stats}")
+    print(matcher.explain(query))
 
-    # a bigger synthetic workload, reference vs vectorized engine
+    # a bigger synthetic workload: one session, both engines on one plan
     g = synthetic_labeled_graph(2000, 8.0, 8, seed=0)
     q = random_walk_query(g, 6, seed=1)
-    ref = cemr_match(q, g, limit=100_000)
-    vec = vector_match(q, g, limit=100_000, tile_rows=1024)
+    session = Matcher(Dataset.from_graph(g),
+                      MatchOptions(limit=100_000))
+    ref = session.count(q, engine="ref")
+    vec = session.count(q, engine="vector", tile_rows=1024)
     print(f"\n[synthetic 2k-vertex graph] ref={ref.count} vec={vec.count} "
           f"(agree: {ref.count == vec.count})")
     print(f"  ref intersections={ref.stats.intersections} "
           f"CEB hits={ref.stats.ceb_hits}")
     print(f"  vec tiles={vec.stats.tiles} dedup_ratio="
           f"{vec.stats.dedup_ratio:.2f}")
+    print(f"  plan cache: {session.cache_info()}   "
+          f"(vec compiled from the cached ref plan)")
 
 
 if __name__ == "__main__":

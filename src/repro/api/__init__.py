@@ -1,0 +1,25 @@
+"""repro.api — the public session-layer API for CEMR subgraph matching.
+
+    from repro.api import Dataset, MatchOptions, Matcher
+
+    ds = Dataset.synthetic("yeast", scale=0.05)   # preprocess once
+    m = Matcher(ds)                               # plan cache, engine="auto"
+    out = m.count(query)                          # MatchOutcome
+    for emb in m.stream(query, limit=10): ...     # explicit embeddings
+    print(m.explain(query))                       # order/coloring/plan
+
+The legacy per-call entry points (`repro.core.cemr_match`,
+`repro.core.engine.vector_match`) remain as deprecated shims; see
+docs/api.md for the migration guide.
+"""
+from .dataset import Dataset
+from .matcher import (AUTO_VECTOR_MIN_ROWS, CacheInfo, CompiledQuery,
+                      Matcher, MatchOutcome)
+from .options import ENCODINGS, ENGINES, ORDER_HEURISTICS, MatchOptions
+from .signature import graph_signature
+
+__all__ = [
+    "Dataset", "Matcher", "MatchOptions", "MatchOutcome", "CompiledQuery",
+    "CacheInfo", "graph_signature", "AUTO_VECTOR_MIN_ROWS",
+    "ENGINES", "ENCODINGS", "ORDER_HEURISTICS",
+]

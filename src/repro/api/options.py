@@ -1,0 +1,94 @@
+"""MatchOptions: one validated, frozen configuration object for both engines.
+
+Replaces the scattered kwargs of the legacy entry points (`encoding`,
+`order_heuristic`, `tile_rows`, `use_cv`, `use_dedup`, `limit`,
+`step_budget`/`max_steps`, ...). Being frozen and data-only, an options
+instance is hashable and safely shareable between a Matcher, its plan cache
+keys, and per-call overrides.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["MatchOptions", "ENGINES", "ENCODINGS", "ORDER_HEURISTICS"]
+
+ENGINES = ("ref", "vector", "auto")
+ENCODINGS = ("cost", "all_black", "all_white", "case12")
+ORDER_HEURISTICS = ("cemr", "ri", "gql")
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchOptions:
+    """Unified matching configuration.
+
+    engine          : "ref" (paper-faithful DFS), "vector" (TPU tile engine),
+                      or "auto" (see Matcher docstring for the heuristic).
+    encoding        : black-white encoding mode (paper §6.3 / Fig. 10a).
+    order_heuristic : matching-order heuristic (Eq. 2-3 / ablations).
+    order           : explicit matching order (overrides the heuristic).
+    tile_rows       : tile capacity of the vector engine (rows per device
+                      step); ignored by the ref engine.
+    use_cer         : Common Extension Reuse (ref engine; the vector engine's
+                      analogue is `use_dedup`).
+    use_cv          : contained-vertex pruning (both engines).
+    use_fs          : failing-set backjumping (ref engine only).
+    use_dedup       : brother-embedding bucketing (vector engine only).
+    limit           : stop after this many embeddings.
+    budget          : device/search step budget (`step_budget` of the ref
+                      engine, `max_steps` of the vector engine); None = no cap.
+    refine_rounds   : candidate-space refinement iterations.
+    materialize     : return explicit embeddings (Matcher.stream sets this).
+    """
+
+    engine: str = "auto"
+    encoding: str = "cost"
+    order_heuristic: str = "cemr"
+    order: tuple[int, ...] | None = None
+    tile_rows: int = 256
+    use_cer: bool = True
+    use_cv: bool = True
+    use_fs: bool = True
+    use_dedup: bool = True
+    limit: int = 1_000_000
+    budget: int | None = None
+    refine_rounds: int = 3
+    materialize: bool = False
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {self.engine!r}")
+        if self.encoding not in ENCODINGS:
+            raise ValueError(f"encoding must be one of {ENCODINGS}, "
+                             f"got {self.encoding!r}")
+        if self.order_heuristic not in ORDER_HEURISTICS:
+            raise ValueError(f"order_heuristic must be one of "
+                             f"{ORDER_HEURISTICS}, got "
+                             f"{self.order_heuristic!r}")
+        if self.order is not None:
+            object.__setattr__(self, "order", tuple(int(u) for u in self.order))
+        if not isinstance(self.tile_rows, int) or self.tile_rows < 1:
+            raise ValueError(f"tile_rows must be a positive int, "
+                             f"got {self.tile_rows!r}")
+        if not isinstance(self.limit, int) or self.limit < 1:
+            raise ValueError(f"limit must be a positive int, "
+                             f"got {self.limit!r}")
+        if self.budget is not None and (not isinstance(self.budget, int)
+                                        or self.budget < 1):
+            raise ValueError(f"budget must be None or a positive int, "
+                             f"got {self.budget!r}")
+        if not isinstance(self.refine_rounds, int) or self.refine_rounds < 0:
+            raise ValueError(f"refine_rounds must be a non-negative int, "
+                             f"got {self.refine_rounds!r}")
+
+    def replace(self, **overrides) -> "MatchOptions":
+        """Return a copy with fields overridden (validation re-runs)."""
+        return dataclasses.replace(self, **overrides)
+
+    @property
+    def plan_key(self) -> tuple:
+        """The option fields that determine the compiled plan (candidate
+        space + order + encoding). Everything else is a runtime knob that
+        reuses the same CompiledQuery."""
+        return (self.encoding, self.order_heuristic, self.order,
+                self.refine_rounds)

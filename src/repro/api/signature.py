@@ -1,0 +1,29 @@
+"""Canonical query/graph signatures for plan-cache keys.
+
+A Graph built by `build_graph` is already in canonical CSR form (rows sorted,
+parallel edges deduped, self-loops dropped), so hashing the CSR arrays gives
+a stable identity: two Graph objects with identical vertex numbering,
+labels, and edges share a signature. The signature is *not* isomorphism-
+invariant — a relabeled query compiles its own plan, which is correct since
+plans are expressed in query-vertex ids.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+__all__ = ["graph_signature"]
+
+
+def graph_signature(g: Graph) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(b"d" if g.directed else b"u")
+    for arr in (g.labels, g.indptr, g.indices):
+        h.update(np.ascontiguousarray(arr).tobytes())
+        h.update(b"|")
+    if g.edge_labels is not None:
+        h.update(np.ascontiguousarray(g.edge_labels).tobytes())
+    return h.hexdigest()

@@ -1,22 +1,66 @@
 """CEMR core: the paper's contribution.
 
+Module map (public entry point is `repro.api`, not this package):
+
   graph       host-side CSR graphs, generators, random-walk queries
-  filtering   LDF/NLF + candidate space + bitmap auxiliary structure
+  filtering   LDF/NLF + candidate space + bitmap auxiliary structure;
+              DataGraphIndex = query-independent preprocessing shared
+              across queries (owned by repro.api.Dataset)
   ordering    matching orders (Eq. 2-3 + ablation orders)
   encoding    black-white encoding (Eq. 4-5) + static query analysis
+  plan        MatchingPlan: compile-time metadata + device bitmap tables
   ref_engine  paper-faithful DFS engine (Algorithms 1-4) — baseline
   engine      vectorized tile engine (TPU-native adaptation)
   count       leaf counting with injectivity inclusion-exclusion
+  bitops      JAX bitset primitives (popcount, expand_select, ...)
   oracle      networkx cross-check (tests only)
+
+Session layer (`repro.api`): Dataset preprocesses a data graph once;
+Matcher compiles queries into cached plans and runs either engine behind
+one result type. `cemr_match` / `vector_match` below are deprecated
+per-call shims kept for compatibility — they re-derive the candidate
+space and plan on every call.
 """
+import warnings
+
+from .filtering import (CandidateSpace, DataGraphIndex, build_candidate_space,
+                        build_data_index, pack_bitmap_adjacency)
 from .graph import (Graph, build_graph, random_walk_query, synthetic_dataset,
                     synthetic_labeled_graph)
-from .filtering import CandidateSpace, build_candidate_space, pack_bitmap_adjacency
-from .ref_engine import MatchResult, MatchStats, cemr_match, preprocess
+from .ref_engine import MatchResult, MatchStats, preprocess
+from .ref_engine import cemr_match as _cemr_match
 
 __all__ = [
     "Graph", "build_graph", "random_walk_query", "synthetic_dataset",
-    "synthetic_labeled_graph", "CandidateSpace", "build_candidate_space",
-    "pack_bitmap_adjacency", "MatchResult", "MatchStats", "cemr_match",
-    "preprocess",
+    "synthetic_labeled_graph", "CandidateSpace", "DataGraphIndex",
+    "build_candidate_space", "build_data_index", "pack_bitmap_adjacency",
+    "MatchResult", "MatchStats", "cemr_match", "vector_match", "preprocess",
 ]
+
+_DEPRECATION_WARNED: set[str] = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"repro.core.{name} is deprecated: it rebuilds the candidate space "
+        f"and plan on every call. Use the session API instead — "
+        f"repro.api.Matcher(Dataset.from_graph(data)).count(query) — which "
+        f"amortizes data-graph preprocessing and caches compiled plans.",
+        DeprecationWarning, stacklevel=3)
+
+
+def cemr_match(*args, **kwargs):
+    """Deprecated shim for repro.core.ref_engine.cemr_match — see repro.api."""
+    _warn_deprecated("cemr_match")
+    return _cemr_match(*args, **kwargs)
+
+
+def vector_match(*args, **kwargs):
+    """Deprecated shim for repro.core.engine.vector_match — see repro.api.
+    (Lazy import keeps `import repro.core` jax-free for ref-engine use.)"""
+    _warn_deprecated("vector_match")
+    from .engine import vector_match as _vector_match
+    return _vector_match(*args, **kwargs)

@@ -101,8 +101,11 @@ class VectorEngine:
 
     def __init__(self, cs: CandidateSpace, an: QueryAnalysis, *,
                  tile_rows: int = 256, use_cv: bool = True,
-                 use_dedup: bool = True, intersect_fn=None):
-        self.plan = build_plan(cs, an)
+                 use_dedup: bool = True, intersect_fn=None,
+                 plan: MatchingPlan | None = None):
+        # `plan` lets a session layer (repro.api.Matcher) build the plan once
+        # and share it across engine configurations.
+        self.plan = build_plan(cs, an) if plan is None else plan
         self.cs, self.an = cs, an
         self.t = tile_rows
         self.use_cv = use_cv

@@ -20,7 +20,59 @@ import numpy as np
 
 from .graph import Graph
 
-__all__ = ["CandidateSpace", "build_candidate_space", "pack_bitmap_adjacency"]
+__all__ = ["CandidateSpace", "DataGraphIndex", "build_data_index",
+           "build_candidate_space", "pack_bitmap_adjacency"]
+
+
+@dataclasses.dataclass
+class DataGraphIndex:
+    """Query-independent preprocessing of one data graph, built once and
+    shared across every query matched against it (`repro.api.Dataset` owns
+    one; thousands of queries amortize it — paper §7.1.2 protocol).
+
+    by_label         : label → sorted int32 vertex ids
+    deg_out/deg_in   : (n,) degrees (deg_in is None for undirected graphs)
+    nbr_label_counts : (n, width) int32 — nbr_label_counts[v, ℓ] = number of
+                       distinct neighbors of v (union of in/out) with label ℓ;
+                       the NLF filter becomes one vectorized comparison.
+    """
+
+    data: Graph
+    by_label: dict[int, np.ndarray]
+    deg_out: np.ndarray
+    deg_in: np.ndarray | None
+    nbr_label_counts: np.ndarray
+
+    def verts_with_label(self, lbl: int) -> np.ndarray:
+        return self.by_label.get(int(lbl), np.empty(0, dtype=np.int32))
+
+
+def build_data_index(data: Graph) -> DataGraphIndex:
+    lab = data.labels
+    n = data.n
+    by_label = {int(l): np.nonzero(lab == l)[0].astype(np.int32)
+                for l in np.unique(lab)}
+    deg_out = np.diff(data.indptr)
+    deg_in = np.diff(data.in_indptr) if data.directed else None
+
+    width = max(int(data.n_labels), int(lab.max(initial=0)) + 1)
+    if data.directed:
+        # union of in/out neighbors, counted once (all_neighbors semantics)
+        src = np.concatenate([
+            np.repeat(np.arange(n, dtype=np.int64), deg_out),
+            np.repeat(np.arange(n, dtype=np.int64), deg_in)])
+        dst = np.concatenate([data.indices.astype(np.int64),
+                              data.in_indices.astype(np.int64)])
+        key = np.unique(src * n + dst)
+        src, dst = key // n, key % n
+    else:
+        src = np.repeat(np.arange(n, dtype=np.int64), deg_out)
+        dst = data.indices.astype(np.int64)
+    flat = src * width + lab[dst]
+    counts = np.bincount(flat, minlength=n * width).reshape(n, width)
+    return DataGraphIndex(data=data, by_label=by_label, deg_out=deg_out,
+                          deg_in=deg_in,
+                          nbr_label_counts=counts.astype(np.int32))
 
 
 @dataclasses.dataclass
@@ -89,49 +141,42 @@ def _compatible_neighbors(query: Graph, data: Graph, u: int, w: int,
     return res
 
 
-def _ldf_nlf(query: Graph, data: Graph) -> list[np.ndarray]:
-    """Label-degree + neighbor-label filters → initial candidate sets."""
-    lab_g = data.labels
-    by_label: dict[int, np.ndarray] = {}
-
-    def verts_with_label(lbl: int) -> np.ndarray:
-        if lbl not in by_label:
-            by_label[lbl] = np.nonzero(lab_g == lbl)[0].astype(np.int32)
-        return by_label[lbl]
-
-    if data.directed:
-        deg_out = np.diff(data.indptr)
-        deg_in = np.diff(data.in_indptr)
-    else:
-        deg_all = data.degree()
-
+def _ldf_nlf(query: Graph, data: Graph,
+             index: DataGraphIndex) -> list[np.ndarray]:
+    """Label-degree + neighbor-label filters → initial candidate sets.
+    Vectorized against the shared DataGraphIndex (one histogram comparison
+    per query vertex instead of a python loop over candidates)."""
+    counts = index.nbr_label_counts
     cand: list[np.ndarray] = []
     for u in range(query.n):
-        base = verts_with_label(int(query.labels[u]))
+        base = index.verts_with_label(int(query.labels[u]))
         if data.directed:
             q_out = query.neighbors(u).shape[0]
             q_in = query.in_neighbors(u).shape[0]
-            base = base[(deg_out[base] >= q_out) & (deg_in[base] >= q_in)]
+            base = base[(index.deg_out[base] >= q_out)
+                        & (index.deg_in[base] >= q_in)]
         else:
-            base = base[deg_all[base] >= query.degree(u)]
+            base = base[index.deg_out[base] >= query.degree(u)]
         # NLF on undirected neighbor label multiset
         q_nbr_labels, q_counts = np.unique(
             query.labels[query.all_neighbors(u)], return_counts=True)
-        keep = np.ones(base.shape[0], dtype=bool)
-        for lbl, cnt in zip(q_nbr_labels.tolist(), q_counts.tolist()):
-            if base.shape[0] == 0:
-                break
-            ok = np.array(
-                [int((lab_g[data.all_neighbors(int(v))] == lbl).sum()) >= cnt
-                 for v in base], dtype=bool)
-            keep &= ok
-        cand.append(base[keep].astype(np.int32))
+        if base.shape[0] and q_nbr_labels.shape[0]:
+            if int(q_nbr_labels.max()) >= counts.shape[1]:
+                base = base[:0]    # label absent from the data graph
+            else:
+                hist = counts[base][:, q_nbr_labels]
+                base = base[np.all(hist >= q_counts[None, :], axis=1)]
+        cand.append(base.astype(np.int32))
     return cand
 
 
 def build_candidate_space(query: Graph, data: Graph, *,
-                          refine_rounds: int = 3) -> CandidateSpace:
-    cand = _ldf_nlf(query, data)
+                          refine_rounds: int = 3,
+                          index: DataGraphIndex | None = None
+                          ) -> CandidateSpace:
+    if index is None:
+        index = build_data_index(data)
+    cand = _ldf_nlf(query, data, index)
     pairs = _query_adjacent_pairs(query)
 
     # --- iterative edge-consistency refinement -------------------------------

@@ -76,10 +76,12 @@ class _BudgetExhausted(Exception):
 
 def preprocess(query: Graph, data: Graph, *, encoding: str = "cost",
                order_heuristic: str = "cemr", order: list[int] | None = None,
-               refine_rounds: int = 3
+               refine_rounds: int = 3, index=None
                ) -> tuple[CandidateSpace, QueryAnalysis]:
-    """Filtering + ordering + encoding + static analysis (Algorithm 1 l.1–2)."""
-    cs = build_candidate_space(query, data, refine_rounds=refine_rounds)
+    """Filtering + ordering + encoding + static analysis (Algorithm 1 l.1–2).
+    `index` is an optional shared DataGraphIndex (see repro.api.Dataset)."""
+    cs = build_candidate_space(query, data, refine_rounds=refine_rounds,
+                               index=index)
     sizes = cs.sizes()
     if order is None:
         order = _ORDER_FNS[order_heuristic](query, sizes)

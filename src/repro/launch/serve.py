@@ -1,7 +1,10 @@
-"""Serving launcher: batched decode for LM archs / scoring for BERT4Rec.
+"""Serving launcher: batched decode for LM archs / scoring for BERT4Rec /
+subgraph-match query serving through the repro.api session layer.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --tokens 16
   PYTHONPATH=src python -m repro.launch.serve --arch bert4rec --shape serve_p99
+  PYTHONPATH=src python -m repro.launch.serve --arch match --dataset yeast \\
+      --scale 0.05 --n-queries 32
 """
 from __future__ import annotations
 
@@ -17,13 +20,47 @@ from repro.launch.mesh import make_local_mesh
 from repro.models.api import build_bundle
 
 
+def serve_match(args) -> None:
+    """Match-query serving: one Dataset preprocessed at startup, a Matcher
+    with a warm plan cache serving the query stream (each distinct query
+    shape compiles once; repeats are cache hits)."""
+    from repro.api import Dataset, MatchOptions, Matcher
+
+    dataset = Dataset.synthetic(args.dataset, scale=args.scale)
+    matcher = Matcher(dataset, MatchOptions(engine=args.engine,
+                                            limit=args.limit))
+    queries = [dataset.random_query(args.query_size, seed=s)
+               for s in range(args.n_queries)]
+    t0 = time.perf_counter()
+    outs = matcher.match_many(queries)
+    dt = time.perf_counter() - t0
+    total = sum(o.count for o in outs)
+    info = matcher.cache_info()
+    print(f"served {len(outs)} queries against {dataset!r} in {dt:.2f}s "
+          f"({len(outs) / dt:.1f} qps) — {total} embeddings")
+    print(f"engines: { {e: sum(1 for o in outs if o.engine == e) for e in ('ref', 'vector')} } "
+          f"plan cache: hits={info.hits} misses={info.misses}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--shape", default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=16)
+    # --arch match (subgraph-match serving) options
+    ap.add_argument("--dataset", default="yeast")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--n-queries", type=int, default=32)
+    ap.add_argument("--query-size", type=int, default=6)
+    ap.add_argument("--limit", type=int, default=100_000)
+    ap.add_argument("--engine", default="auto",
+                    choices=["ref", "vector", "auto"])
     args = ap.parse_args()
+
+    if args.arch == "match":
+        serve_match(args)
+        return
 
     mesh = make_local_mesh()
     bundle = build_bundle(args.arch, reduced=True)

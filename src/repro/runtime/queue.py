@@ -7,8 +7,13 @@ mitigation (deadline-based re-issue, first-result-wins), elastic scaling
 (executors join/leave between items), and checkpoint/restart (persist the
 queue + partial counts).
 
+Execution goes through the `repro.api` session layer: one Matcher owns the
+preprocessed Dataset and the plan cache, so a re-issued query attempt (or a
+duplicate query in the workload) reuses its compiled plan instead of
+re-deriving the candidate space — `stats["cache_hits"]` counts those reuses.
+
 This module is runnable on one host (executors are in-process workers driving
-the same VectorEngine); the scheduling logic is the deliverable — the device
+the same engines); the scheduling logic is the deliverable — the device
 placement underneath is jax's.
 """
 from __future__ import annotations
@@ -19,9 +24,8 @@ import os
 import time
 from collections import deque
 
-from repro.core.engine import VectorEngine
+from repro.api import Dataset, Matcher, MatchOptions
 from repro.core.graph import Graph
-from repro.core.ref_engine import preprocess
 
 __all__ = ["QueryItem", "MatchQueueRuntime"]
 
@@ -41,21 +45,26 @@ class QueryItem:
 class MatchQueueRuntime:
     """Queue of queries over a shared data graph. `n_executors` simulates the
     pod-level workers; each executor processes one query item at a time
-    (within an item, the VectorEngine tiles the frontier)."""
+    (within an item, the engine tiles the frontier)."""
 
-    def __init__(self, data: Graph, *, encoding: str = "cost",
-                 tile_rows: int = 2048, deadline_s: float = 120.0,
-                 max_attempts: int = 3, state_path: str | None = None):
-        self.data = data
-        self.encoding = encoding
-        self.tile_rows = tile_rows
+    def __init__(self, data: Graph | Dataset, *, encoding: str = "cost",
+                 engine: str = "vector", tile_rows: int = 2048,
+                 deadline_s: float = 120.0, max_attempts: int = 3,
+                 state_path: str | None = None, plan_cache_size: int = 256):
+        self.dataset = (data if isinstance(data, Dataset)
+                        else Dataset.from_graph(data))
+        self.matcher = Matcher(
+            self.dataset,
+            MatchOptions(engine=engine, encoding=encoding,
+                         tile_rows=tile_rows),
+            plan_cache_size=plan_cache_size)
         self.deadline_s = deadline_s
         self.max_attempts = max_attempts
         self.state_path = state_path
         self.pending: deque[QueryItem] = deque()
         self.results: dict[int, QueryItem] = {}
         self.stats = {"reissued": 0, "failed": 0, "completed": 0,
-                      "checkpoints": 0}
+                      "checkpoints": 0, "cache_hits": 0}
 
     def submit(self, queries: list[Graph], *, limit: int = 1_000_000,
                max_steps: int | None = 50_000) -> None:
@@ -68,15 +77,19 @@ class MatchQueueRuntime:
     # --------------------------------------------------------------- executor
     def _execute(self, item: QueryItem, fail_hook=None) -> QueryItem:
         t0 = time.perf_counter()
+        # compile first: a plan survives executor death (it lives in the
+        # shared Matcher), so a re-issued attempt starts from the cache.
+        # cache_hits counts attempts whose plan was already compiled
+        # (re-issues and duplicate workload queries).
+        hits_before = self.matcher.cache_info().hits
+        self.matcher.compile(item.query)
+        self.stats["cache_hits"] += (self.matcher.cache_info().hits
+                                     - hits_before)
         if fail_hook is not None:
             fail_hook(item)     # test hook: may raise (simulated node death)
-        cs, an = preprocess(item.query, self.data, encoding=self.encoding)
-        if any(c.shape[0] == 0 for c in cs.cand):
-            item.count = 0
-        else:
-            eng = VectorEngine(cs, an, tile_rows=self.tile_rows)
-            res = eng.run(limit=item.limit, max_steps=item.max_steps)
-            item.count = res.count
+        out = self.matcher.count(item.query, limit=item.limit,
+                                 budget=item.max_steps)
+        item.count = out.count
         item.elapsed_s = time.perf_counter() - t0
         item.done = True
         return item

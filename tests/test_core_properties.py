@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) for the CEMR core invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import build_graph, cemr_match, synthetic_labeled_graph, random_walk_query
 from repro.core.count import injective_count, _partitions

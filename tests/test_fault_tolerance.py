@@ -97,6 +97,9 @@ def test_match_queue_reissues_failed_items(tmp_path):
     results = rt.run(fail_hook=fail_hook, checkpoint_every=2)
     assert rt.stats["reissued"] >= 2
     assert rt.stats["failed"] == 0
+    # the two re-issued attempts reuse plans compiled before the simulated
+    # death (the plan cache lives in the shared Matcher, not the executor)
+    assert rt.stats["cache_hits"] >= 2
     assert [results[i] for i in range(5)] == expected
     assert rt.restore() is not None   # checkpoint file exists + parses
 
