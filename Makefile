@@ -1,4 +1,4 @@
-.PHONY: verify test bench
+.PHONY: verify test bench bench-baseline perf-smoke
 
 verify:
 	bash scripts/ci.sh
@@ -7,4 +7,12 @@ test:
 	PYTHONPATH=src python -m pytest -x -q
 
 bench:
-	PYTHONPATH=src python -m benchmarks.run
+	PYTHONPATH=src python -m benchmarks.run --json BENCH_engine.json
+
+# regenerate the committed perf-smoke baseline (fig7 + scheduler rows)
+bench-baseline:
+	PYTHONPATH=src python -m benchmarks.run --only fig7,sched --json benchmarks/BENCH_engine.json
+
+perf-smoke:
+	PYTHONPATH=src python -m benchmarks.run --only fig7 --json /tmp/BENCH_new.json
+	PYTHONPATH=src python scripts/perf_smoke.py /tmp/BENCH_new.json benchmarks/BENCH_engine.json

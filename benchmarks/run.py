@@ -1,22 +1,36 @@
 """Benchmark entrypoint: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the
+same rows machine-readable (BENCH_engine.json) for the CI perf smoke.
 
-  PYTHONPATH=src python -m benchmarks.run            # fast subset (CI)
-  PYTHONPATH=src python -m benchmarks.run --full     # larger workloads
-  PYTHONPATH=src python -m benchmarks.run --only fig7
+  PYTHONPATH=src python -m benchmarks.run              # fast subset (CI)
+  PYTHONPATH=src python -m benchmarks.run --full       # larger workloads
+  PYTHONPATH=src python -m benchmarks.run --only fig7,sched
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_engine.json
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
 
-from . import paper_figs
+from . import paper_figs, scheduler_bench
+
+
+def parse_rows(rows: list[str]) -> dict:
+    out = {}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        out[name] = {"us_per_call": float(us), "derived": derived}
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--json", nargs="?", const="BENCH_engine.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to PATH (default BENCH_engine.json)")
     args = ap.parse_args()
     scale = 0.08 if args.full else 0.03
 
@@ -30,16 +44,29 @@ def main() -> None:
         "fig11": lambda: paper_figs.fig11_lsqb(),
         "fig14": lambda: paper_figs.fig14_eps(scale=max(scale, 0.05)),
         "fig15": lambda: paper_figs.fig15_session(scale=max(scale, 0.05)),
+        "sched": lambda: (scheduler_bench.sched_supersteps(scale=scale)
+                          + scheduler_bench.sched_session(
+                              scale=max(scale, 0.05))),
     }
+    only = set(args.only.split(",")) if args.only else None
+    collected: list[str] = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
-        if args.only and args.only != name:
+        if only and name not in only:
             continue
         try:
             for row in fn():
+                collected.append(row)
                 print(row, flush=True)
         except Exception as e:   # noqa: BLE001
-            print(f"{name}.ERROR,0,{type(e).__name__}:{e}", flush=True)
+            row = f"{name}.ERROR,0,{type(e).__name__}:{e}"
+            collected.append(row)
+            print(row, flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": parse_rows(collected)}, f, indent=1,
+                      sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,69 @@
+"""Scheduler benchmark: fused supersteps vs the stage-at-a-time compat loop.
+
+Evidence for the device-resident scheduler's acceptance criteria: on the
+fig7 CI workloads, warm per-query time and host dispatches per query
+(`VectorStats.device_steps`, = jitted calls) for
+
+  * `fused`  — the default superstep scheduler (CER buffer + tile packing),
+  * `compat` — the legacy per-stage loop (use_cer_buffer=False), which is
+    the pre-scheduler host-driven architecture with one dispatch per
+    primitive and per-tile host syncs.
+
+Rows: sched.<dataset>.<mode>,us_per_query,dispatches=..;supersteps=..;cer=..
+plus a session-style (fig15 protocol) vector row pair.
+"""
+from __future__ import annotations
+
+from repro.api import MatchOptions
+
+from .common import bench_row, load_datasets, make_queries, matcher_for
+
+
+def sched_supersteps(scale=0.03, limit=20_000):
+    rows = []
+    fused = MatchOptions(engine="vector", tile_rows=512, limit=limit)
+    compat = fused.replace(use_cer_buffer=False)
+    for name, data in load_datasets(scale).items():
+        queries = make_queries(data, sizes=(4, 6), per_size=3)
+        m = matcher_for(data)
+        for label, opts in (("fused", fused), ("compat", compat)):
+            total, steps, ss, hits, misses = 0.0, 0, 0, 0, 0
+            for _, q in queries:
+                m.count(q, opts)                 # warm: compile plan + jit
+                res = m.count(q, opts)
+                total += res.elapsed_s
+                steps += res.stats.device_steps
+                ss += res.stats.supersteps
+                hits += res.stats.cer_hits
+                misses += res.stats.cer_misses
+            nq = max(len(queries), 1)
+            hitrate = hits / max(hits + misses, 1)
+            rows.append(bench_row(
+                f"sched.{name}.{label}", total / nq,
+                f"dispatches={steps / nq:.1f};supersteps={ss / nq:.1f};"
+                f"cer_hit_rate={hitrate:.2f}"))
+    return rows
+
+
+def sched_session(scale=0.05, limit=20_000, rounds=3):
+    """fig15 protocol on the vector engine: warm plan cache + warm jit +
+    engine-lifetime CER buffers, the serving posture of the ROADMAP."""
+    import time
+
+    rows = []
+    data = load_datasets(scale, names=["yeast"])["yeast"]
+    m = matcher_for(data)
+    opts = MatchOptions(engine="vector", tile_rows=512, limit=limit)
+    queries = [q for _, q in make_queries(data, sizes=(4, 6), per_size=3)]
+    for q in queries:
+        m.count(q, opts)                         # cold compile
+    t0 = time.perf_counter()
+    steps = 0
+    for _ in range(rounds):
+        for q in queries:
+            steps += m.count(q, opts).stats.device_steps
+    warm = (time.perf_counter() - t0) / max(rounds, 1)
+    nq = max(len(queries), 1)
+    rows.append(bench_row("sched.session.warm", warm / nq,
+                          f"dispatches={steps / (rounds * nq):.1f}"))
+    return rows

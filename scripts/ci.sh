@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full test suite plus a benchmark smoke check.
+# Tier-1 verification: the full test suite plus benchmark + perf smoke checks.
 # Usage: bash scripts/ci.sh   (or: make verify)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,9 +16,13 @@ python -m pytest -x -q \
 echo "== benchmark smoke (fig7) =="
 # benchmarks.run prints <name>.ERROR rows instead of raising; turn those
 # into a hard failure here.
-out="$(python -m benchmarks.run --only fig7)"
+bench_json="$(mktemp /tmp/BENCH_new.XXXXXX.json)"
+out="$(python -m benchmarks.run --only fig7 --json "$bench_json")"
 echo "$out"
 if grep -q "\.ERROR," <<<"$out"; then
     echo "benchmark smoke failed (ERROR rows above)" >&2
     exit 1
 fi
+
+echo "== perf smoke (fig7 vector vs committed baseline) =="
+python scripts/perf_smoke.py "$bench_json" benchmarks/BENCH_engine.json

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""CI perf smoke: fail if the fig7 vector path regressed >2x vs the
+committed baseline.
+
+Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
+
+Both files are `benchmarks.run --json` outputs. Absolute wall-clock differs
+across machines, so the guarded metric is the per-dataset ratio
+
+    max(fig7.<ds>.vector us, FLOOR)  /  max(fig7.<ds>.cemr us, FLOOR)
+
+(vector-engine time normalized by the reference DFS engine on the same
+host). Clamping both terms to ABS_FLOOR_US keeps the ratio meaningful when
+either engine finishes in the sub-millisecond noise regime — for datasets
+where the ref engine is near-instant the check degrades to comparing the
+vector time against the floor, and vector rows entirely below the floor
+pass outright. The check fails when
+`new_ratio > max(TOLERANCE * baseline_ratio, 1.0)` for any dataset — the
+1.0 floor keeps runs where the vector engine still beats the reference DFS
+engine from flagging, even against a baseline captured on a lucky run.
+
+This is a smoke, not a profiler: with the clamps the effective trip point
+is a ~1.8-3x slowdown depending on how close the dataset's times sit to
+the floor and how noisy the ref denominator is. It exists to catch gross
+vector-path regressions without flaking on timer noise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+TOLERANCE = 1.75
+ABS_FLOOR_US = 1500.0
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def vector_ratios(rows: dict) -> dict[str, tuple[float, float]]:
+    """dataset -> (clamped vector/cemr ratio, raw vector us)."""
+    out = {}
+    for name, row in rows.items():
+        parts = name.split(".")
+        if len(parts) != 3 or parts[0] != "fig7" or parts[2] != "vector":
+            continue
+        ds = parts[1]
+        ref = rows.get(f"fig7.{ds}.cemr")
+        if not ref:
+            continue
+        ratio = (max(row["us_per_call"], ABS_FLOOR_US)
+                 / max(ref["us_per_call"], ABS_FLOOR_US))
+        out[ds] = (ratio, row["us_per_call"])
+    return out
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    new_path = sys.argv[1]
+    base_path = sys.argv[2] if len(sys.argv) > 2 else \
+        "benchmarks/BENCH_engine.json"
+    new_ratios = vector_ratios(load(new_path))
+    base_ratios = vector_ratios(load(base_path))
+    if not new_ratios or not base_ratios:
+        print("perf-smoke: no fig7 vector/cemr row pairs found; "
+              "did the bench run with --only fig7 --json?")
+        return 2
+    failed = False
+    for ds, (ratio, us) in sorted(new_ratios.items()):
+        if ds not in base_ratios:
+            print(f"perf-smoke: {ds}: no baseline, skipped")
+            continue
+        base = base_ratios[ds][0]
+        limit = max(TOLERANCE * base, 1.0)
+        verdict = "ok"
+        if us < ABS_FLOOR_US:
+            verdict = "ok (below noise floor)"
+        elif ratio > limit:
+            verdict = "FAIL"
+            failed = True
+        print(f"perf-smoke: {ds}: vector/cemr {ratio:.2f} "
+              f"(baseline {base:.2f}, limit {limit:.2f}) {verdict}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -89,11 +89,17 @@ class CompiledQuery:
 
     def vector_engine(self, opts: MatchOptions, intersect_fn=None):
         from repro.core.engine import VectorEngine
-        key = (opts.tile_rows, opts.use_cv, opts.use_dedup, id(intersect_fn))
+        key = (opts.tile_rows, opts.use_cv, opts.use_dedup,
+               opts.use_cer_buffer, opts.cer_buffer_slots, opts.pack_tiles,
+               opts.intersect, id(intersect_fn))
         eng = self._engines.get(key)
         if eng is None:
             eng = VectorEngine(self.cs, self.an, tile_rows=opts.tile_rows,
                                use_cv=opts.use_cv, use_dedup=opts.use_dedup,
+                               use_cer_buffer=opts.use_cer_buffer,
+                               cer_buffer_slots=opts.cer_buffer_slots,
+                               pack_tiles=opts.pack_tiles,
+                               intersect=opts.intersect,
                                intersect_fn=intersect_fn, plan=self.plan)
             self._engines[key] = eng
         return eng

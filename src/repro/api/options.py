@@ -10,7 +10,12 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["MatchOptions", "ENGINES", "ENCODINGS", "ORDER_HEURISTICS"]
+# canonical, jax-free home of the tuple (importing repro.core.engine here
+# would pull jax into every `import repro.api`, breaking ref-engine-only use)
+from repro.core.plan import INTERSECT_MODES
+
+__all__ = ["MatchOptions", "ENGINES", "ENCODINGS", "ORDER_HEURISTICS",
+           "INTERSECT_MODES"]
 
 ENGINES = ("ref", "vector", "auto")
 ENCODINGS = ("cost", "all_black", "all_white", "case12")
@@ -32,10 +37,20 @@ class MatchOptions:
                       analogue is `use_dedup`).
     use_cv          : contained-vertex pruning (both engines).
     use_fs          : failing-set backjumping (ref engine only).
-    use_dedup       : brother-embedding bucketing (vector engine only).
+    use_dedup       : brother-embedding dedup / CER (vector engine only).
+    use_cer_buffer  : cross-tile CER ring buffer (vector engine; False
+                      selects the stage-at-a-time compat loop, which uses
+                      the per-tile bucketed compute when use_dedup is on).
+    cer_buffer_slots: ring-buffer capacity per CER-enabled stage.
+    pack_tiles      : merge sub-capacity sibling frontiers before dispatch
+                      (frontier compaction; vector engine only).
+    intersect       : intersect kernel — "auto" (Pallas compiled on TPU, jnp
+                      oracle elsewhere), "pallas" (force the kernel;
+                      interpret-mode off-TPU), or "jnp".
     limit           : stop after this many embeddings.
     budget          : device/search step budget (`step_budget` of the ref
-                      engine, `max_steps` of the vector engine); None = no cap.
+                      engine, `max_steps` = jitted dispatches of the vector
+                      engine); None = no cap.
     refine_rounds   : candidate-space refinement iterations.
     materialize     : return explicit embeddings (Matcher.stream sets this).
     """
@@ -49,6 +64,10 @@ class MatchOptions:
     use_cv: bool = True
     use_fs: bool = True
     use_dedup: bool = True
+    use_cer_buffer: bool = True
+    cer_buffer_slots: int = 256
+    pack_tiles: bool = True
+    intersect: str = "auto"
     limit: int = 1_000_000
     budget: int | None = None
     refine_rounds: int = 3
@@ -70,6 +89,13 @@ class MatchOptions:
         if not isinstance(self.tile_rows, int) or self.tile_rows < 1:
             raise ValueError(f"tile_rows must be a positive int, "
                              f"got {self.tile_rows!r}")
+        if self.intersect not in INTERSECT_MODES:
+            raise ValueError(f"intersect must be one of {INTERSECT_MODES}, "
+                             f"got {self.intersect!r}")
+        if (not isinstance(self.cer_buffer_slots, int)
+                or self.cer_buffer_slots < 1):
+            raise ValueError(f"cer_buffer_slots must be a positive int, "
+                             f"got {self.cer_buffer_slots!r}")
         if not isinstance(self.limit, int) or self.limit < 1:
             raise ValueError(f"limit must be a positive int, "
                              f"got {self.limit!r}")

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["popcount_words", "row_popcount", "onehot_word_mask",
-           "clear_bit_rows", "expand_select", "nth_set_bit"]
+           "clear_bit_rows", "clear_bit_rows_count", "expand_select",
+           "nth_set_bit"]
 
 
 def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
@@ -19,8 +20,10 @@ def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
 
 
 def row_popcount(bm: jnp.ndarray) -> jnp.ndarray:
-    """(…, W) uint32 bitmap → (…,) int32 total set bits."""
-    return popcount_words(bm).sum(axis=-1)
+    """(…, W) uint32 bitmap → (…,) int32 total set bits. The explicit
+    accumulator dtype keeps the result int32 even when traced under x64
+    (the scheduler's leaf supersteps)."""
+    return popcount_words(bm).sum(axis=-1, dtype=jnp.int32)
 
 
 def onehot_word_mask(idx: jnp.ndarray, n_words: int) -> jnp.ndarray:
@@ -36,6 +39,15 @@ def onehot_word_mask(idx: jnp.ndarray, n_words: int) -> jnp.ndarray:
 def clear_bit_rows(bm: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """Clear bit `idx[t]` in row t of bitmap (T, W). idx<0 → no-op row."""
     return bm & ~onehot_word_mask(idx, bm.shape[-1])
+
+
+def clear_bit_rows_count(bm: jnp.ndarray, idx: jnp.ndarray):
+    """Like clear_bit_rows, but also return (T,) int32 with 1 where the bit
+    was actually set — lets a caller maintain a fused popcount without
+    re-reducing the whole row."""
+    mask = onehot_word_mask(idx, bm.shape[-1])
+    was_set = ((bm & mask) != 0).any(axis=-1).astype(jnp.int32)
+    return bm & ~mask, was_set
 
 
 def nth_set_bit(word: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:

@@ -1,4 +1,4 @@
-"""Vectorized CEMR engine: level-synchronous tile enumeration in JAX.
+"""Vectorized CEMR engine: stage/kernel construction for tile enumeration.
 
 TPU-native adaptation of the paper's DFS enumeration (DESIGN.md §2):
 
@@ -7,27 +7,32 @@ TPU-native adaptation of the paper's DFS enumeration (DESIGN.md §2):
     BM columns (aggregated white mappings, uint32 bitmaps over per-label
     candidate spaces);
   * extending u_i = gather adjacency bitmap rows for the backward-neighbor
-    mappings and AND them (the `bitmap_intersect` hot loop — Pallas kernel on
-    TPU, jnp oracle on CPU);
+    mappings and AND them (the `bitmap_intersect` hot loop — Pallas kernel,
+    compiled on TPU / interpret on CPU, or the jnp gather oracle);
   * CEM: Case-2/4.2 extensions *store* R as a bitmap column — whole sub-trees
     advance as one row (the paper's aggregated embeddings);
   * expansion to IDX columns is a fixed-capacity enumeration of set bits
     (`bitops.expand_select`); overflow re-enters the host work stack, giving
     DFS-over-tiles bounded memory and anytime results;
   * CER: rows whose extension read-set (BK columns + same-label IDX columns)
-    coincide are brother embeddings — the engine measures the duplicate
-    fraction and (optionally) computes the intersection on the deduplicated
-    prefix only (bucketed compute, see §Perf);
+    coincide are brother embeddings — one extension computation serves the
+    whole class, either through the cross-tile CER ring buffer (scheduler.py)
+    or the per-tile bucketed compute below;
   * contained-vertex pruning = per-row popcount threshold;
   * injectivity: IDX values of the same label are pairwise distinct by eager
     bit-clearing; BM columns are kept disjoint from same-label IDX values;
     same-label BM×BM overlap is corrected exactly at the leaf by
     inclusion-exclusion (groups capped at 3 by the encoder).
+
+This module owns the *static* side: the stage plan, the per-stage compute /
+expand / dedup closures, and their jitted wrappers. The *runtime* side — the
+device-resident superstep loop, frontier compaction, the CER buffer, and
+on-device leaf counting — lives in scheduler.py; `VectorEngine.run()`
+delegates to it.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -38,15 +43,22 @@ from .count import iter_injective
 from .encoding import QueryAnalysis
 from .filtering import CandidateSpace
 from .graph import Graph
-from .plan import BM, IDX, LevelOp, MatchingPlan, build_plan
+from .plan import (BM, IDX, INTERSECT_MODES, LevelOp, MatchingPlan,
+                   build_plan)
 from .ref_engine import preprocess
 
-__all__ = ["VectorMatchResult", "VectorStats", "vector_match", "VectorEngine"]
+__all__ = ["VectorMatchResult", "VectorStats", "vector_match", "VectorEngine",
+           "INTERSECT_MODES"]
 
 
 @dataclasses.dataclass
 class VectorStats:
+    """Counters for one vector-engine run. See docs/engine.md for the field
+    glossary; `device_steps` counts jitted host→device dispatches (one per
+    superstep / merge / legacy kernel call), never double-charged."""
+
     device_steps: int = 0
+    supersteps: int = 0
     tiles: int = 0
     expansions: int = 0
     rows_processed: int = 0
@@ -54,7 +66,12 @@ class VectorStats:
     gather_and_ops: int = 0          # adjacency rows gathered+ANDed (work proxy)
     dedup_keys_seen: int = 0
     dedup_unique: int = 0
+    cer_hits: int = 0                # rows served from the cross-tile CER buffer
+    cer_misses: int = 0
+    bucketed_tiles: int = 0          # per-tile CER bucketed computes (compat path)
+    packed_tiles: int = 0            # sibling-tile merges (frontier compaction)
     leaf_tiles: int = 0
+    leaf_overflows: int = 0          # uint64 leaf reductions that fell back to host
     peak_stack: int = 0
 
     @property
@@ -96,13 +113,29 @@ def _union_rows(table, bmcol):
     return packed
 
 
+def _resolve_intersect_fn(intersect: str):
+    """Map the `intersect` knob to an intersect_fn (or None = jnp gather):
+    "auto" = Pallas compiled on TPU, jnp oracle elsewhere (interpret-mode
+    Pallas is a correctness tool, not a perf path); "pallas" = force the
+    kernel (interpret on non-TPU); "jnp" = force the oracle."""
+    if intersect not in INTERSECT_MODES:
+        raise ValueError(f"intersect must be one of {INTERSECT_MODES}, "
+                         f"got {intersect!r}")
+    from repro.kernels import ops as _kops
+    if intersect == "pallas" or (intersect == "auto" and _kops.on_tpu()):
+        return _kops.make_intersect_fn(use_pallas=True)
+    return None
+
+
 class VectorEngine:
     """Compiled matcher for one (query, data, encoding) plan."""
 
     def __init__(self, cs: CandidateSpace, an: QueryAnalysis, *,
                  tile_rows: int = 256, use_cv: bool = True,
                  use_dedup: bool = True, intersect_fn=None,
-                 plan: MatchingPlan | None = None):
+                 plan: MatchingPlan | None = None, intersect: str = "auto",
+                 use_cer_buffer: bool = True, cer_buffer_slots: int = 256,
+                 pack_tiles: bool = True):
         # `plan` lets a session layer (repro.api.Matcher) build the plan once
         # and share it across engine configurations.
         self.plan = build_plan(cs, an) if plan is None else plan
@@ -110,6 +143,11 @@ class VectorEngine:
         self.t = tile_rows
         self.use_cv = use_cv
         self.use_dedup = use_dedup
+        self.use_cer_buffer = use_cer_buffer
+        self.cer_buffer_slots = cer_buffer_slots
+        self.pack_tiles = pack_tiles
+        if intersect_fn is None:
+            intersect_fn = _resolve_intersect_fn(intersect)
         self.intersect_fn = intersect_fn  # pluggable kernel (Pallas ops)
         p = self.plan
         self.tables = {f"{u}:{w}": jnp.asarray(t) for (u, w), t in p.tables.items()}
@@ -117,6 +155,7 @@ class VectorEngine:
         self.stats = VectorStats()
         self._stages = self._build_stages()
         self._jit_cache: dict = {}
+        self._scheduler = None
 
     # ------------------------------------------------------------- stage plan
     def _build_stages(self):
@@ -141,73 +180,76 @@ class VectorEngine:
             stages.append(("extend", op))
         return stages
 
-    # -------------------------------------------------------------- jit steps
-    def _compute_fn(self, si: int):
-        key = ("compute", si)
-        if key in self._jit_cache:
-            return self._jit_cache[key]
+    # ----------------------------------------------------------- raw closures
+    # The scheduler composes these untraced closures into fused supersteps;
+    # the jitted wrappers below serve the per-stage compat path.
+
+    def _make_compute_parts(self, si: int):
+        """Return (compute_r, con): compute_r(tile, tables, masks) -> (r, pop)
+        produces the extension bitmap *before* any aliveness interaction —
+        pure in the extension read-set, which is what makes the result
+        cacheable in the CER buffer."""
         stage = self._stages[si]
 
         if stage[0] == "decompose":
             _, v, slot, same_bm, words_src = stage
 
-            def compute(tile, tables, masks):
-                return tile["bm"][v], tile["alive"]
-        else:
-            op: LevelOp = stage[1]
-            pairs = [(s, u, op.vertex) for (s, u) in op.bk_pairs]
-            con = max(op.con_threshold, 1) if self.use_cv else 1
-            root = op.level == 0
-            ext_fn = self.intersect_fn
+            def compute_r(tile, tables, masks):
+                r = tile["bm"][v]
+                return r, bitops.row_popcount(r)
 
-            def compute(tile, tables, masks):
-                alive = tile["alive"]
-                if root:
-                    r = jnp.broadcast_to(masks[op.vertex][None, :],
-                                         (tile["alive"].shape[0], op.n_words))
-                elif pairs:
-                    if ext_fn is not None:
-                        tabs = [tables[f"{u}:{w}"] for (_, u, w) in pairs]
-                        idxs = jnp.stack([tile["idx"][:, s] for (s, _, _) in pairs], 1)
-                        r = ext_fn(tabs, idxs)
-                    else:
-                        r = None
-                        for (s, u_j, u_i) in pairs:
-                            rows = tables[f"{u_j}:{u_i}"][tile["idx"][:, s]]
-                            r = rows if r is None else (r & rows)
+            return compute_r, 1
+
+        op: LevelOp = stage[1]
+        pairs = [(s, u, op.vertex) for (s, u) in op.bk_pairs]
+        con = max(op.con_threshold, 1) if self.use_cv else 1
+        root = op.level == 0
+        ext_fn = self.intersect_fn
+
+        def compute_r(tile, tables, masks):
+            pop = None
+            if root:
+                r = jnp.broadcast_to(masks[op.vertex][None, :],
+                                     (tile["alive"].shape[0], op.n_words))
+            elif pairs:
+                if ext_fn is not None:
+                    tabs = [tables[f"{u}:{w}"] for (_, u, w) in pairs]
+                    idxs = jnp.stack([tile["idx"][:, s] for (s, _, _) in pairs], 1)
+                    out = ext_fn(tabs, idxs)
+                    if not (isinstance(out, tuple) and len(out) == 2):
+                        raise TypeError(
+                            "intersect_fn must return (R, pop) — the ANDed "
+                            "bitmap and its fused per-row popcount (see "
+                            "kernels.ops.make_intersect_fn). Returning R "
+                            "alone was the pre-scheduler contract.")
+                    r, pop = out                  # fused popcount from kernel
                 else:
-                    r = _union_rows(tables[f"{op.union_src}:{op.vertex}"],
-                                    tile["bm"][op.union_src])
-                for s in op.same_label_idx_slots:
-                    r = bitops.clear_bit_rows(r, tile["idx"][:, s])
-                pop = bitops.row_popcount(r)
-                ok = alive & (pop >= con) & (pop > 0)
-                r = jnp.where(ok[:, None], r, jnp.uint32(0))
-                return r, ok
+                    r = None
+                    for (s, u_j, u_i) in pairs:
+                        rows = tables[f"{u_j}:{u_i}"][tile["idx"][:, s]]
+                        r = rows if r is None else (r & rows)
+            else:
+                r = _union_rows(tables[f"{op.union_src}:{op.vertex}"],
+                                tile["bm"][op.union_src])
+            cleared = jnp.int32(0)
+            for s in op.same_label_idx_slots:
+                r, c = bitops.clear_bit_rows_count(r, tile["idx"][:, s])
+                cleared = cleared + c
+            pop = bitops.row_popcount(r) if pop is None else pop - cleared
+            return r, pop
 
-        fn = jax.jit(compute)
-        self._jit_cache[key] = fn
-        return fn
+        return compute_r, con
 
-    def _store_bm_fn(self, si: int):
-        key = ("store", si)
-        if key in self._jit_cache:
-            return self._jit_cache[key]
-        op: LevelOp = self._stages[si][1]
+    @staticmethod
+    def finish_compute(tile, r, pop, con):
+        """Aliveness + contained-vertex prune; dead rows' bitmaps are zeroed
+        so downstream bit enumeration and merges see only live work."""
+        ok = tile["alive"] & (pop >= con) & (pop > 0)
+        r = jnp.where(ok[:, None], r, jnp.uint32(0))
+        pop = jnp.where(ok, pop, 0)
+        return r, pop, ok
 
-        def store(tile, r, ok):
-            bm = dict(tile["bm"])
-            bm[op.vertex] = r
-            return {"idx": tile["idx"], "bm": bm, "alive": ok}
-
-        fn = jax.jit(store)
-        self._jit_cache[key] = fn
-        return fn
-
-    def _expand_fn(self, si: int):
-        key = ("expand", si)
-        if key in self._jit_cache:
-            return self._jit_cache[key]
+    def _make_expand(self, si: int):
         stage = self._stages[si]
         t_out = self.t
         if stage[0] == "decompose":
@@ -215,13 +257,11 @@ class VectorEngine:
             wt_prune: list[tuple[int, str]] = []
             same_label_bm = list(same_bm)
             drop_bm = v
-            new_vertex = v
         else:
             op: LevelOp = stage[1]
             wt_prune = [(u_j, f"{op.vertex}:{u_j}") for u_j in op.wt_vertices]
             same_label_bm = list(op.same_label_bm)
             drop_bm = None
-            new_vertex = op.vertex
 
         def expand(tile, r, start, tables):
             rows, bitpos, valid, total = bitops.expand_select(r, start, t_out)
@@ -242,14 +282,11 @@ class VectorEngine:
                 bm_out[u] = g
             return {"idx": idx, "bm": bm_out, "alive": alive}, total
 
-        fn = jax.jit(expand)
-        self._jit_cache[key] = fn
-        return fn
+        return expand
 
-    def _leaf_fn(self):
-        key = ("leaf",)
-        if key in self._jit_cache:
-            return self._jit_cache[key]
+    def _make_leaf_terms(self):
+        """tile -> (T, n_terms) int32 popcount terms for leaf counting
+        (singles, then per-group inclusion-exclusion terms)."""
         plan = self.plan
         singles = list(plan.leaf_singles)
         groups = [list(g) for g in plan.leaf_groups]
@@ -272,9 +309,43 @@ class VectorEngine:
                               bitops.row_popcount(a & c),
                               bitops.row_popcount(b & c),
                               bitops.row_popcount(a & b & c)]
-            t = (jnp.stack(terms, axis=1) if terms
-                 else jnp.zeros((tile["alive"].shape[0], 0), jnp.int32))
-            return t, tile["alive"]
+            return (jnp.stack(terms, axis=1) if terms
+                    else jnp.zeros((tile["alive"].shape[0], 0), jnp.int32))
+
+        return leaf
+
+    # -------------------------------------------------------------- jit steps
+    def _compute_fn(self, si: int):
+        key = ("compute", si)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        compute_r, con = self._make_compute_parts(si)
+
+        def compute(tile, tables, masks):
+            r, pop = compute_r(tile, tables, masks)
+            r, pop, ok = self.finish_compute(tile, r, pop, con)
+            return r, ok
+
+        fn = jax.jit(compute)
+        self._jit_cache[key] = fn
+        return fn
+
+    def _expand_fn(self, si: int):
+        key = ("expand", si)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        fn = jax.jit(self._make_expand(si))
+        self._jit_cache[key] = fn
+        return fn
+
+    def _leaf_fn(self):
+        key = ("leaf",)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        leaf_terms = self._make_leaf_terms()
+
+        def leaf(tile):
+            return leaf_terms(tile), tile["alive"]
 
         fn = jax.jit(leaf)
         self._jit_cache[key] = fn
@@ -346,119 +417,14 @@ class VectorEngine:
         self._jit_cache[key] = fn
         return fn
 
-    # ------------------------------------------------------------- leaf count
-    def _leaf_count(self, tile) -> tuple[int, np.ndarray]:
-        terms, alive = self._leaf_fn()(tile)
-        terms = np.asarray(terms)
-        alive = np.asarray(alive)
-        plan = self.plan
-        counts = np.zeros(terms.shape[0], dtype=object)
-        k = 0
-        per_row = np.ones(terms.shape[0], dtype=object)
-        for _u in plan.leaf_singles:
-            per_row = per_row * terms[:, k].astype(object)
-            k += 1
-        for g in plan.leaf_groups:
-            if len(g) == 2:
-                pa, pb, pab = terms[:, k], terms[:, k + 1], terms[:, k + 2]
-                per_row = per_row * (pa.astype(object) * pb - pab)
-                k += 3
-            else:
-                pa, pb, pc = terms[:, k], terms[:, k + 1], terms[:, k + 2]
-                pab, pac, pbc = terms[:, k + 3], terms[:, k + 4], terms[:, k + 5]
-                pabc = terms[:, k + 6]
-                per_row = per_row * (
-                    pa.astype(object) * pb * pc - pab * pc - pac * pb
-                    - pbc * pa + 2 * pabc)
-                k += 7
-        counts = np.where(alive, per_row, 0)
-        return int(counts.sum()), counts
-
     # --------------------------------------------------------------- schedule
     def run(self, *, limit: int = 1_000_000, max_steps: int | None = None,
             materialize: bool = False) -> VectorMatchResult:
-        st = self.stats = VectorStats()
-        t = self.t
-        n_stages = len(self._stages)
-        count = 0
-        timed_out = False
-        embeddings: list[dict[int, int]] = []
-
-        root_tile = {"idx": jnp.zeros((1, 0), jnp.int32), "bm": {},
-                     "alive": jnp.ones((1,), bool)}
-        # stack items: ("tile", stage_idx, tile) | ("expand", stage_idx, tile, R, cursor)
-        stack: list = [("tile", 0, root_tile)]
-
-        while stack:
-            if max_steps is not None and st.device_steps >= max_steps:
-                timed_out = True
-                break
-            st.peak_stack = max(st.peak_stack, len(stack))
-            item = stack.pop()
-            if item[0] == "tile":
-                _, si, tile = item
-                if si == n_stages:           # leaf
-                    st.leaf_tiles += 1
-                    st.device_steps += 1
-                    c, per_row = self._leaf_count(tile)
-                    if materialize and c:
-                        embeddings.extend(self._materialize(tile))
-                    count += c
-                    if count >= limit:
-                        break
-                    continue
-                stage = self._stages[si]
-                st.tiles += 1
-                st.device_steps += 1
-                rows = int(tile["alive"].shape[0])
-                st.rows_processed += rows
-                if stage[0] == "decompose":
-                    r, ok = self._compute_fn(si)(tile, self.tables, self.masks)
-                    r = jnp.where(ok[:, None], r, jnp.uint32(0))
-                    stack.append(("expand", si, tile, r, 0))
-                else:
-                    op: LevelOp = stage[1]
-                    bucketed = False
-                    if self.use_dedup and op.dedup_slots and op.bk_pairs:
-                        u, rep_rows, group_of = self._dedup_fn(si)(tile)
-                        u = int(u)
-                        st.dedup_keys_seen += int(np.asarray(tile["alive"]).sum())
-                        st.dedup_unique += u
-                        if 0 < u <= rows // 2:
-                            # CER: compute one extension per brother class
-                            bucket = 1 << max(u - 1, 1).bit_length()
-                            bucket = min(bucket, rows)
-                            r, ok = self._bucket_compute_fn(si, bucket)(
-                                tile, rep_rows, group_of, self.tables)
-                            st.gather_and_ops += bucket * len(op.bk_pairs)
-                            bucketed = True
-                    if not bucketed:
-                        st.gather_and_ops += rows * max(len(op.bk_pairs), 1)
-                        r, ok = self._compute_fn(si)(tile, self.tables,
-                                                     self.masks)
-                    if op.store == BM:
-                        new_tile = self._store_bm_fn(si)(tile, r, ok)
-                        if bool(jnp.any(new_tile["alive"])):
-                            stack.append(("tile", si + 1, new_tile))
-                    else:
-                        stack.append(("expand", si, tile, r, 0))
-            else:
-                _, si, tile, r, cursor = item
-                st.device_steps += 1
-                st.expansions += 1
-                out, total = self._expand_fn(si)(tile, r, jnp.int32(cursor),
-                                                 self.tables)
-                total = int(total)
-                if cursor + t < total:
-                    stack.append(("expand", si, tile, r, cursor + t))
-                alive_n = int(np.asarray(out["alive"]).sum())
-                st.rows_alive += alive_n
-                if alive_n:
-                    stack.append(("tile", si + 1, out))
-
-        return VectorMatchResult(count=min(count, limit), stats=st,
-                                 timed_out=timed_out,
-                                 embeddings=embeddings if materialize else None)
+        from .scheduler import TileScheduler
+        if self._scheduler is None:
+            self._scheduler = TileScheduler(self)
+        return self._scheduler.run(limit=limit, max_steps=max_steps,
+                                   materialize=materialize)
 
     # ------------------------------------------------------------ materialize
     def _materialize(self, tile) -> list[dict[int, int]]:
@@ -504,6 +470,8 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
                  max_steps: int | None = None, materialize: bool = False,
                  use_cv: bool = True, use_dedup: bool = True,
                  intersect_fn=None, order: list[int] | None = None,
+                 intersect: str = "auto", use_cer_buffer: bool = True,
+                 cer_buffer_slots: int = 256, pack_tiles: bool = True,
                  ) -> VectorMatchResult:
     """End-to-end vectorized CEMR matching (preprocess + tile enumeration)."""
     cs, an = preprocess(query, data, encoding=encoding, order=order)
@@ -511,5 +479,8 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
         return VectorMatchResult(count=0, stats=VectorStats(), timed_out=False,
                                  embeddings=[] if materialize else None)
     eng = VectorEngine(cs, an, tile_rows=tile_rows, use_cv=use_cv,
-                       use_dedup=use_dedup, intersect_fn=intersect_fn)
+                       use_dedup=use_dedup, intersect_fn=intersect_fn,
+                       intersect=intersect, use_cer_buffer=use_cer_buffer,
+                       cer_buffer_slots=cer_buffer_slots,
+                       pack_tiles=pack_tiles)
     return eng.run(limit=limit, max_steps=max_steps, materialize=materialize)

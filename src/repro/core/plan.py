@@ -22,9 +22,15 @@ import numpy as np
 from .encoding import BLACK, WHITE, QueryAnalysis
 from .filtering import CandidateSpace
 
-__all__ = ["LevelOp", "MatchingPlan", "build_plan"]
+__all__ = ["LevelOp", "MatchingPlan", "build_plan", "INTERSECT_MODES"]
 
 IDX, BM = 0, 1
+
+# Intersect-kernel selection vocabulary, shared by the engine
+# (engine._resolve_intersect_fn) and the options layer
+# (repro.api.MatchOptions). Lives here — not in engine.py — so validating
+# options stays jax-free for ref-engine-only hosts.
+INTERSECT_MODES = ("auto", "jnp", "pallas")
 
 
 @dataclasses.dataclass

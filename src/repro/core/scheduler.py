@@ -1,0 +1,658 @@
+"""Device-resident tile scheduler for the vectorized CEMR engine.
+
+The engine (engine.py) builds the static stage plan and per-stage closures;
+this module owns the runtime. Four mechanisms keep the enumeration on-device
+and the host loop thin:
+
+  * **Fused supersteps** — the stage list is cut at *boundary* stages (IDX
+    stores and decomposes, i.e. wherever set-bit expansion happens). One
+    superstep = one jitted call that expands a frontier chunk and then runs
+    the *entire remaining ladder of segments*: each boundary's frontier is
+    re-expanded in place as long as it fits one chunk (a traced
+    `(total <= tile_rows) & alive` mask guards continuation — overshooting
+    segments compute on masked-dead rows and contribute zero), down to the
+    leaf reduction. A query whose frontiers all fit completes in a single
+    dispatch; overflowing frontiers come back to the host work stack with
+    their extension bitmaps and re-enter chunked expansion. The host reads
+    back one packed int32 stats vector per superstep instead of syncing per
+    primitive.
+
+  * **Frontier compaction + tile packing** — an overflowing frontier that
+    comes back to the host with few live rows is not dispatched immediately:
+    the scheduler parks it per boundary stage and merges sibling frontiers
+    (dead rows compacted out, live rows concatenated) until a tile
+    approaches `tile_rows`, so the fixed capacity is utilized instead of
+    carrying dead lanes.
+
+  * **Cross-tile CER buffer** — the paper's common extension buffer: a
+    device-side ring buffer per CER-enabled stage, keyed by the extension
+    read-set (BK + same-label IDX columns). Because the extension bitmap is a
+    pure function of that read-set, results cached by one tile serve brother
+    embeddings in *sibling* tiles popped later from the work stack. Hit/miss
+    counters surface in VectorStats.
+
+  * **On-device leaf counting** — leaf supersteps are traced under scoped
+    x64: the inclusion-exclusion product reduces in int64 on device, with a
+    float64 magnitude bound tripping an overflow flag; only flagged tiles
+    fall back to the exact host big-int path.
+
+The per-tile bucketed CER compute (engine._bucket_compute_fn) survives as a
+compat path (`use_dedup=True, use_cer_buffer=False`), running the legacy
+stage-at-a-time loop with corrected step accounting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from . import bitops
+from .engine import VectorMatchResult, VectorStats
+from .plan import IDX, LevelOp
+
+__all__ = ["TileScheduler", "leaf_count_host", "make_leaf_reduce",
+           "OVERFLOW_LIMIT"]
+
+# Conservative magnitude bound for the on-device int64 leaf reduction: every
+# per-row product and the tile sum are bounded by a float64 upper bound; if
+# that bound reaches 2**62 (half of int64 range, >> float64 rounding error)
+# the tile falls back to exact host arithmetic.
+OVERFLOW_LIMIT = float(2 ** 62)
+
+
+# ---------------------------------------------------------------------------
+# leaf counting
+# ---------------------------------------------------------------------------
+
+def leaf_count_host(leaf_singles, leaf_groups, terms, alive):
+    """Exact inclusion-exclusion leaf count in Python big-int arithmetic —
+    the overflow fallback (and the reference for the device reduction)."""
+    terms = np.asarray(terms)
+    alive = np.asarray(alive)
+    per_row = np.ones(terms.shape[0], dtype=object)
+    k = 0
+    for _u in leaf_singles:
+        per_row = per_row * terms[:, k].astype(object)
+        k += 1
+    for g in leaf_groups:
+        if len(g) == 2:
+            pa, pb, pab = terms[:, k], terms[:, k + 1], terms[:, k + 2]
+            per_row = per_row * (pa.astype(object) * pb - pab)
+            k += 3
+        else:
+            pa, pb, pc = terms[:, k], terms[:, k + 1], terms[:, k + 2]
+            pab, pac, pbc = terms[:, k + 3], terms[:, k + 4], terms[:, k + 5]
+            pabc = terms[:, k + 6]
+            per_row = per_row * (
+                pa.astype(object) * pb * pc - pab * pc - pac * pb
+                - pbc * pa + 2 * pabc)
+            k += 7
+    counts = np.where(alive, per_row, 0)
+    return int(counts.sum())
+
+
+def make_leaf_reduce(leaf_singles, leaf_groups):
+    """Device leaf reduction: (terms (T, n) int32, alive (T,) bool) ->
+    (count () int64, overflow () bool). Must be traced under enable_x64()."""
+    n_singles = len(leaf_singles)
+    group_sizes = [len(g) for g in leaf_groups]
+
+    def reduce(terms, alive):
+        t64 = terms.astype(jnp.int64)
+        f64 = terms.astype(jnp.float64)
+        per = jnp.ones(terms.shape[0], jnp.int64)
+        bound = jnp.ones(terms.shape[0], jnp.float64)
+        k = 0
+        for _ in range(n_singles):
+            per = per * t64[:, k]
+            bound = bound * f64[:, k]
+            k += 1
+        for gs in group_sizes:
+            if gs == 2:
+                pa, pb, pab = t64[:, k], t64[:, k + 1], t64[:, k + 2]
+                per = per * (pa * pb - pab)
+                # pab <= pa*pb, so pa*pb bounds the composite and both
+                # intermediates
+                bound = bound * f64[:, k] * f64[:, k + 1]
+                k += 3
+            else:
+                pa, pb, pc = t64[:, k], t64[:, k + 1], t64[:, k + 2]
+                pab, pac, pbc = t64[:, k + 3], t64[:, k + 4], t64[:, k + 5]
+                pabc = t64[:, k + 6]
+                per = per * (pa * pb * pc - pab * pc - pac * pb
+                             - pbc * pa + 2 * pabc)
+                # every subtracted term is <= pa*pb*pc; the +2*pabc tail is
+                # covered explicitly
+                bound = bound * (f64[:, k] * f64[:, k + 1] * f64[:, k + 2]
+                                 + 2.0 * f64[:, k + 6])
+                k += 7
+        bound = jnp.where(alive, bound, 0.0)
+        overflow = bound.sum() >= OVERFLOW_LIMIT
+        count = jnp.where(alive, per, 0).sum()
+        return count, overflow
+
+    return reduce
+
+
+# ---------------------------------------------------------------------------
+# cross-tile CER ring buffer
+# ---------------------------------------------------------------------------
+
+def _init_cer_buffer(n_slots: int, key_width: int, n_words: int):
+    return {
+        "keys": jnp.full((n_slots, key_width), -1, jnp.int32),
+        "hash": jnp.full((n_slots,), -1, jnp.int32),
+        "vals": jnp.zeros((n_slots, n_words), jnp.uint32),
+        "pops": jnp.zeros((n_slots,), jnp.int32),
+        "valid": jnp.zeros((n_slots,), bool),
+        "ptr": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cer_compute(op: LevelOp, compute_r, tile, buf, tables, masks):
+    """Buffered extension compute for one CER-enabled stage.
+
+    The buffer caches (key = read-set columns) -> (R after same-label bit
+    clearing, popcount) *before* any aliveness masking, so a value written by
+    one tile is valid for every brother row in any sibling tile. Lookup is
+    hash-first — one (T, K) int32 compare, then exact-key verification of the
+    single candidate slot — so a hash collision can only cause a miss
+    (recompute), never a wrong hit. Returns
+    (r, pop, new_buf, (hits, misses, seen, inserted))."""
+    alive = tile["alive"]
+    keys = jnp.stack([tile["idx"][:, s] for s in op.dedup_slots], axis=1)
+    h = jnp.zeros(keys.shape[0], jnp.int32)
+    for j in range(keys.shape[1]):
+        h = h * jnp.int32(1000003) + keys[:, j]          # wraps: fine
+    cand = (buf["hash"][None, :] == h[:, None]) & buf["valid"][None, :]
+    maybe = cand.any(axis=1)
+    hidx = jnp.argmax(cand, axis=1)
+    hit = maybe & (buf["keys"][hidx] == keys).all(axis=-1)
+    miss = alive & ~hit
+    any_miss = miss.any()
+    # the extension compute itself is cond-gated: a fully-warm superstep
+    # (every live key cached) skips the gather+AND entirely — the CEB claim,
+    # one extension computation per brother class — paying only the lookup
+    n_words = buf["vals"].shape[1]
+
+    def _compute(_):
+        return compute_r(tile, tables, masks)
+
+    def _skip(_):
+        return (jnp.zeros((keys.shape[0], n_words), jnp.uint32),
+                jnp.zeros((keys.shape[0],), jnp.int32))
+
+    r_c, pop_c = jax.lax.cond(any_miss, _compute, _skip, None)
+    r = jnp.where(hit[:, None], buf["vals"][hidx], r_c)
+    pop = jnp.where(hit, buf["pops"][hidx], pop_c)
+
+    # ring-insert one representative per distinct missing key (deduped by
+    # hash: a same-tile hash collision just skips an insert). The whole
+    # insert — sort, dedup, scatter — is gated behind the same cond.
+    n_slots = buf["keys"].shape[0]
+
+    def do_insert(buf):
+        order = jnp.lexsort((h, ~miss))                  # miss rows first
+        h_s = h[order]
+        miss_s = miss[order]
+        diff = jnp.concatenate([jnp.ones(1, bool), h_s[1:] != h_s[:-1]])
+        first = miss_s & diff
+        rank = jnp.cumsum(first.astype(jnp.int32)) - 1
+        # cap inserts at buffer capacity so scatter slots are unique per call
+        # (duplicate-slot scatters could pair a key with another row's value)
+        first_ok = first & (rank < n_slots)
+        n_ins = first_ok.sum().astype(jnp.int32)
+        slot = jnp.where(first_ok, (buf["ptr"] + rank) % n_slots,
+                         n_slots).astype(jnp.int32)      # n_slots = dummy row
+        pad_k = jnp.concatenate([buf["keys"],
+                                 jnp.zeros((1, keys.shape[1]), jnp.int32)])
+        pad_h = jnp.concatenate([buf["hash"], jnp.zeros((1,), jnp.int32)])
+        pad_v = jnp.concatenate(
+            [buf["vals"], jnp.zeros((1, buf["vals"].shape[1]), jnp.uint32)])
+        pad_p = jnp.concatenate([buf["pops"], jnp.zeros((1,), jnp.int32)])
+        pad_ok = jnp.concatenate([buf["valid"], jnp.zeros((1,), bool)])
+        pad_k = pad_k.at[slot].set(keys[order])
+        pad_h = pad_h.at[slot].set(h_s)
+        pad_v = pad_v.at[slot].set(r_c[order])
+        pad_p = pad_p.at[slot].set(pop_c[order])
+        pad_ok = pad_ok.at[slot].set(jnp.ones(slot.shape[0], bool))
+        return {"keys": pad_k[:n_slots], "hash": pad_h[:n_slots],
+                "vals": pad_v[:n_slots], "pops": pad_p[:n_slots],
+                "valid": pad_ok[:n_slots],
+                "ptr": ((buf["ptr"] + n_ins) % n_slots).astype(jnp.int32)
+                }, n_ins
+
+    new_buf, n_ins = jax.lax.cond(
+        any_miss, do_insert, lambda b: (b, jnp.int32(0)), buf)
+    stats = ((alive & hit).sum().astype(jnp.int32),
+             miss.sum().astype(jnp.int32),
+             alive.sum().astype(jnp.int32), n_ins)
+    return r, pop, new_buf, stats
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+class TileScheduler:
+    """Runtime for one VectorEngine: fused supersteps over a host work stack,
+    with per-boundary pending buffers for tile packing and engine-lifetime
+    CER ring buffers (sound across runs: cached values are pure functions of
+    the read-set given the engine's fixed tables)."""
+
+    def __init__(self, eng):
+        self.eng = eng
+        self.t = eng.t
+        self._n_stages = len(eng._stages)
+        self._jit: dict = {}
+        self._cer_stages = [si for si in range(self._n_stages)
+                            if self._cer_eligible(si)]
+        self._buffers = {}
+        for si in self._cer_stages:
+            op = eng._stages[si][1]
+            self._buffers[si] = _init_cer_buffer(
+                eng.cer_buffer_slots, len(op.dedup_slots), op.n_words)
+        self.stats = VectorStats()
+
+    # ----------------------------------------------------------- static shape
+    def _is_boundary(self, si: int) -> bool:
+        stage = self.eng._stages[si]
+        return stage[0] == "decompose" or stage[1].store == IDX
+
+    def _cer_eligible(self, si: int) -> bool:
+        eng = self.eng
+        if not (eng.use_dedup and eng.use_cer_buffer):
+            return False
+        stage = eng._stages[si]
+        return (stage[0] == "extend" and bool(stage[1].dedup_slots)
+                and bool(stage[1].bk_pairs))
+
+    def _segment(self, b: int):
+        """BM-store stages fused after boundary `b`, and the exit stage
+        (the next boundary, or n_stages = leaf)."""
+        bms = []
+        si = b + 1
+        while si < self._n_stages and not self._is_boundary(si):
+            bms.append(si)
+            si += 1
+        return bms, si
+
+    # ------------------------------------------------------------- superstep
+    def _ladder(self, b: int):
+        """Segments from boundary `b` down to the leaf:
+        [(boundary, bm_stage list, exit stage), ...]; the last exit is
+        n_stages (leaf)."""
+        segs = []
+        si = b
+        while True:
+            bms, exit_si = self._segment(si)
+            segs.append((si, bms, exit_si))
+            if exit_si == self._n_stages:
+                return segs
+            si = exit_si
+
+    def _superstep(self, b: int):
+        """One jitted run-to-completion call from boundary `b`: expand the
+        given frontier chunk, then keep descending — each deeper boundary's
+        frontier is expanded in place while it fits one chunk (traced
+        `proceed` mask; overshooting work is masked dead and contributes
+        zero) — ending in the leaf reduction. Returns every intermediate
+        frontier so the host can resume exactly where the ladder stopped."""
+        key = ("ss", b)
+        if key in self._jit:
+            return self._jit[key]
+        eng = self.eng
+        t = self.t
+        cer_set = set(self._cer_stages)
+        segs = self._ladder(b)
+        exit_bounds = [exit_si for (_, _, exit_si) in segs[:-1]]
+        built = []                                       # per-segment closures
+        seg_cer: list = []
+        gather_ops = 0
+        n_computes = 0
+        for (si, bms, exit_si) in segs:
+            leaf_i = exit_si == self._n_stages
+            chain = []
+            for sj in bms + ([] if leaf_i else [exit_si]):
+                compute_r, con = eng._make_compute_parts(sj)
+                chain.append((sj, eng._stages[sj][1], compute_r, con))
+                seg_cer += [sj] if sj in cer_set else []
+                if eng._stages[sj][0] == "extend":
+                    gather_ops += t * max(len(eng._stages[sj][1].bk_pairs), 1)
+                n_computes += 1
+            built.append((eng._make_expand(si), chain, leaf_i))
+        leaf_terms = eng._make_leaf_terms()
+        leaf_reduce = make_leaf_reduce(eng.plan.leaf_singles,
+                                       eng.plan.leaf_groups)
+        root = b == 0
+        if root:
+            root_compute_r, root_con = eng._make_compute_parts(0)
+
+        def run_compute(si, op, compute_r, con, tile, bufs, acc, tables,
+                        masks):
+            if si in bufs:
+                r, pop, bufs[si], s = _cer_compute(op, compute_r, tile,
+                                                   bufs[si], tables, masks)
+                acc = [a + v for a, v in zip(acc, s)]
+            else:
+                r, pop = compute_r(tile, tables, masks)
+            r, pop, ok = eng.finish_compute(tile, r, pop, con)
+            return r, pop, ok, acc
+
+        def step(tile, r_in, cursor, bufs, tables, masks):
+            bufs = dict(bufs)
+            acc = [jnp.int32(0)] * 4                     # hits/misses/seen/ins
+            if root:
+                r0, pop0 = root_compute_r(tile, tables, masks)
+                r_in, _, _ = eng.finish_compute(tile, r0, pop0, root_con)
+            frontiers = []                               # (tile, r) per bound
+            alive_l, total_l = [], []
+            proceed = None
+            cur_tile, cur_r, cur_cursor = tile, r_in, cursor
+            total_in = None
+            for k, (expand, chain, leaf_i) in enumerate(built):
+                cur, tot = expand(cur_tile, cur_r, cur_cursor, tables)
+                if k == 0:
+                    total_in = tot.astype(jnp.int32)
+                else:
+                    cur["alive"] = cur["alive"] & proceed
+                last = None
+                for (sj, op, compute_r, con) in chain:
+                    r, pop, ok, acc = run_compute(sj, op, compute_r, con,
+                                                  cur, bufs, acc, tables,
+                                                  masks)
+                    last = (r, pop, ok)
+                    if not leaf_i and sj == chain[-1][0]:
+                        break                            # exit compute: no store
+                    bm = dict(cur["bm"])
+                    bm[op.vertex] = r
+                    cur = {"idx": cur["idx"], "bm": bm, "alive": ok}
+                if leaf_i:
+                    terms = leaf_terms(cur)
+                    count, overflow = leaf_reduce(terms, cur["alive"])
+                    leaf_alive = cur["alive"].sum().astype(jnp.int32)
+                    packed = jnp.stack(
+                        [total_in, leaf_alive, *alive_l, *total_l, *acc])
+                    return cur, terms, count, overflow, packed, frontiers, bufs
+                r2, pop2, ok2 = last
+                alive_k = ok2.sum().astype(jnp.int32)
+                total_k = jnp.sum(pop2, dtype=jnp.int32)
+                frontiers.append((cur, r2))
+                alive_l.append(alive_k)
+                total_l.append(total_k)
+                ok_here = (total_k <= t) & (alive_k > 0)
+                proceed = ok_here if proceed is None else (proceed & ok_here)
+                cur_tile, cur_r, cur_cursor = cur, r2, jnp.int32(0)
+
+        entry = (jax.jit(step), exit_bounds, sorted(set(seg_cer)),
+                 n_computes, gather_ops)
+        self._jit[key] = entry
+        return entry
+
+    def _merge_fn(self, b: int):
+        """Frontier compaction: concatenate two sub-capacity sibling
+        frontiers at boundary `b`, live rows (nonzero extension bitmap)
+        packed to the front, sliced back to tile capacity."""
+        key = ("merge", b)
+        if key in self._jit:
+            return self._jit[key]
+        t = self.t
+
+        def merge(ta, ra, tb, rb):
+            idx = jnp.concatenate([ta["idx"], tb["idx"]])
+            bm = {u: jnp.concatenate([ta["bm"][u], tb["bm"][u]])
+                  for u in ta["bm"]}
+            r = jnp.concatenate([ra, rb])
+            live = bitops.row_popcount(r) > 0
+            order = jnp.argsort(~live)[:t]               # stable: live first
+            tile = {"idx": idx[order],
+                    "bm": {u: c[order] for u, c in bm.items()},
+                    "alive": live[order]}
+            return tile, r[order]
+
+        fn = jax.jit(merge)
+        self._jit[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------- run
+    def run(self, *, limit: int = 1_000_000, max_steps: int | None = None,
+            materialize: bool = False) -> VectorMatchResult:
+        # use_cer_buffer=False selects the stage-at-a-time compat loop (the
+        # documented legacy architecture), with or without its per-tile
+        # bucketed CER (use_dedup)
+        if not self.eng.use_cer_buffer:
+            return self._run_tiles(limit=limit, max_steps=max_steps,
+                                   materialize=materialize)
+        return self._run_fused(limit=limit, max_steps=max_steps,
+                               materialize=materialize)
+
+    def _push_frontier(self, b, tile, r, alive_n, total, stack, pending):
+        """Route a host-resumed frontier: pack sub-capacity frontiers with
+        pending siblings at the same boundary, dispatch otherwise."""
+        st = self.stats
+        if self.eng.pack_tiles and alive_n * 2 <= self.t:
+            pend = pending.get(b)
+            if pend is None:
+                pending[b] = [tile, r, alive_n, total]
+            elif pend[2] + alive_n <= self.t:
+                mtile, mr = self._merge_fn(b)(pend[0], pend[1], tile, r)
+                st.device_steps += 1
+                st.packed_tiles += 1
+                pending[b] = [mtile, mr, pend[2] + alive_n, pend[3] + total]
+            else:
+                stack.append((b, pend[0], pend[1], 0))
+                pending[b] = [tile, r, alive_n, total]
+        else:
+            stack.append((b, tile, r, 0))
+
+    def _run_fused(self, *, limit, max_steps, materialize):
+        eng = self.eng
+        st = self.stats = eng.stats = VectorStats()
+        t = self.t
+        count = 0
+        timed_out = False
+        embeddings: list[dict[int, int]] = []
+
+        root_tile = {"idx": jnp.zeros((1, 0), jnp.int32), "bm": {},
+                     "alive": jnp.ones((1,), bool)}
+        root_r = jnp.zeros((1, eng.plan.root_words), jnp.uint32)  # recomputed
+        # frontier items: (boundary stage, tile, extension bitmap R, cursor)
+        stack: list = [(0, root_tile, root_r, 0)]
+        # boundary -> [tile, r, live rows, total bits]: sub-capacity frontiers
+        # waiting to be packed with siblings
+        pending: dict[int, list] = {}
+
+        while stack or pending:
+            if not stack:
+                b = max(pending)                         # flush deepest first
+                tile_p, r_p, _, _ = pending.pop(b)
+                stack.append((b, tile_p, r_p, 0))
+                continue
+            if max_steps is not None and st.device_steps >= max_steps:
+                timed_out = True
+                break
+            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
+            b, tile, r, cursor = stack.pop()
+            fn, exit_bounds, seg_cer, n_computes, gather_ops = \
+                self._superstep(b)
+            bufs = {si: self._buffers[si] for si in seg_cer}
+            with enable_x64():                           # leaf reduce is int64
+                leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2 = fn(
+                    tile, r, jnp.int32(cursor), bufs, eng.tables, eng.masks)
+            packed_np, cnt_np, ovf_np = jax.device_get((packed, cnt, ovf))
+            for si in seg_cer:
+                self._buffers[si] = bufs2[si]
+            st.device_steps += 1
+            st.supersteps += 1
+            st.tiles += 1
+            st.expansions += 1
+            st.rows_processed += t * max(n_computes, 1)
+            st.gather_and_ops += gather_ops
+            nb = len(exit_bounds)
+            total_in = int(packed_np[0])
+            leaf_alive = int(packed_np[1])
+            alive_l = [int(v) for v in packed_np[2:2 + nb]]
+            total_l = [int(v) for v in packed_np[2 + nb:2 + 2 * nb]]
+            hits, misses, seen, uniq = (int(v) for v in packed_np[2 + 2 * nb:])
+            st.cer_hits += hits
+            st.cer_misses += misses
+            st.dedup_keys_seen += seen
+            st.dedup_unique += uniq
+            if cursor + t < total_in:
+                stack.append((b, tile, r, cursor + t))
+            # walk the ladder: consumed boundaries (single-chunk) descend
+            # in-device; the first overflowing frontier resumes on the host
+            reached_leaf = True
+            for k in range(nb):
+                st.rows_alive += alive_l[k]
+                if alive_l[k] == 0:                      # dead end
+                    reached_leaf = False
+                    break
+                if total_l[k] <= t:
+                    continue                             # consumed in-ladder
+                ft, fr = frontiers[k]
+                self._push_frontier(exit_bounds[k], ft, fr, alive_l[k],
+                                    total_l[k], stack, pending)
+                reached_leaf = False
+                break
+            if not reached_leaf:
+                continue
+            st.leaf_tiles += 1
+            st.rows_alive += leaf_alive
+            if bool(ovf_np):
+                st.leaf_overflows += 1
+                c = leaf_count_host(eng.plan.leaf_singles,
+                                    eng.plan.leaf_groups,
+                                    terms, leaf_tile["alive"])
+            else:
+                c = int(cnt_np)
+            if materialize and c:
+                embeddings.extend(eng._materialize(leaf_tile))
+            count += c
+            if count >= limit:
+                break
+
+        return VectorMatchResult(count=min(count, limit), stats=st,
+                                 timed_out=timed_out,
+                                 embeddings=embeddings if materialize else None)
+
+    # ---------------------------------------------------------- compat path
+    def _leaf_reduce_fn(self):
+        key = ("leaf_reduce",)
+        if key in self._jit:
+            return self._jit[key]
+        fn = jax.jit(make_leaf_reduce(self.eng.plan.leaf_singles,
+                                      self.eng.plan.leaf_groups))
+        self._jit[key] = fn
+        return fn
+
+    def _leaf_count(self, tile):
+        """Device uint64 leaf count with exact host fallback on overflow."""
+        st = self.stats
+        eng = self.eng
+        terms, alive = eng._leaf_fn()(tile)
+        st.device_steps += 1
+        with enable_x64():
+            cnt, ovf = self._leaf_reduce_fn()(terms, alive)
+        st.device_steps += 1
+        if bool(jax.device_get(ovf)):
+            st.leaf_overflows += 1
+            return leaf_count_host(eng.plan.leaf_singles, eng.plan.leaf_groups,
+                                   terms, alive)
+        return int(jax.device_get(cnt))
+
+    def _run_tiles(self, *, limit, max_steps, materialize):
+        """Stage-at-a-time loop (pre-superstep architecture): one jitted
+        dispatch per primitive with host-driven control flow. Kept as the
+        `use_cer_buffer=False` compat path — it is where the per-tile CER
+        bucketed compute lives — and as a parity reference for the fused
+        scheduler. Each dispatch charges `device_steps` exactly once."""
+        eng = self.eng
+        st = self.stats = eng.stats = VectorStats()
+        t = self.t
+        n_stages = self._n_stages
+        count = 0
+        timed_out = False
+        embeddings: list[dict[int, int]] = []
+
+        root_tile = {"idx": jnp.zeros((1, 0), jnp.int32), "bm": {},
+                     "alive": jnp.ones((1,), bool)}
+        # stack: ("tile", stage, tile) | ("expand", stage, tile, R, cursor)
+        stack: list = [("tile", 0, root_tile)]
+
+        while stack:
+            if max_steps is not None and st.device_steps >= max_steps:
+                timed_out = True
+                break
+            st.peak_stack = max(st.peak_stack, len(stack))
+            item = stack.pop()
+            if item[0] == "tile":
+                _, si, tile = item
+                if si == n_stages:           # leaf
+                    st.leaf_tiles += 1
+                    c = self._leaf_count(tile)
+                    if materialize and c:
+                        embeddings.extend(eng._materialize(tile))
+                    count += c
+                    if count >= limit:
+                        break
+                    continue
+                stage = eng._stages[si]
+                st.tiles += 1
+                rows = int(tile["alive"].shape[0])
+                st.rows_processed += rows
+                if stage[0] == "decompose":
+                    r, ok = eng._compute_fn(si)(tile, eng.tables, eng.masks)
+                    st.device_steps += 1
+                    stack.append(("expand", si, tile, r, 0))
+                else:
+                    op: LevelOp = stage[1]
+                    bucketed = False
+                    if eng.use_dedup and op.dedup_slots and op.bk_pairs:
+                        u, rep_rows, group_of = eng._dedup_fn(si)(tile)
+                        st.device_steps += 1
+                        u = int(u)
+                        st.dedup_keys_seen += int(
+                            np.asarray(tile["alive"]).sum())
+                        st.dedup_unique += u
+                        if 0 < u <= rows // 2:
+                            # CER: one extension compute per brother class
+                            bucket = 1 << max(u - 1, 1).bit_length()
+                            bucket = min(bucket, rows)
+                            r, ok = eng._bucket_compute_fn(si, bucket)(
+                                tile, rep_rows, group_of, eng.tables)
+                            st.device_steps += 1
+                            st.bucketed_tiles += 1
+                            st.gather_and_ops += bucket * len(op.bk_pairs)
+                            bucketed = True
+                    if not bucketed:
+                        st.gather_and_ops += rows * max(len(op.bk_pairs), 1)
+                        r, ok = eng._compute_fn(si)(tile, eng.tables,
+                                                    eng.masks)
+                        st.device_steps += 1
+                    if op.store == IDX:
+                        stack.append(("expand", si, tile, r, 0))
+                    else:
+                        bm = dict(tile["bm"])
+                        bm[op.vertex] = r
+                        new_tile = {"idx": tile["idx"], "bm": bm, "alive": ok}
+                        if bool(jnp.any(ok)):
+                            stack.append(("tile", si + 1, new_tile))
+            else:
+                _, si, tile, r, cursor = item
+                st.expansions += 1
+                out, total = eng._expand_fn(si)(tile, r, jnp.int32(cursor),
+                                                eng.tables)
+                st.device_steps += 1
+                total = int(total)
+                if cursor + t < total:
+                    stack.append(("expand", si, tile, r, cursor + t))
+                alive_n = int(np.asarray(out["alive"]).sum())
+                st.rows_alive += alive_n
+                if alive_n:
+                    stack.append(("tile", si + 1, out))
+
+        return VectorMatchResult(count=min(count, limit), stats=st,
+                                 timed_out=timed_out,
+                                 embeddings=embeddings if materialize else None)

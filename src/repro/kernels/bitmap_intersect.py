@@ -42,8 +42,10 @@ def _kernel(k: int, n_wb: int, idx_ref, *refs):
     def _init():
         pop_ref[...] = jnp.zeros_like(pop_ref)
 
+    # explicit accumulator dtype: keeps the popcount int32 even when the
+    # caller traces under x64 (the scheduler's leaf supersteps)
     pop_ref[...] += jax.lax.population_count(r).astype(jnp.int32).sum(
-        axis=1, keepdims=True)
+        axis=1, keepdims=True, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("words_per_block", "interpret"))

@@ -1,9 +1,11 @@
 """jit'd dispatch wrappers around the Pallas kernels.
 
-Every op has a pure-jnp oracle in ref.py; `use_pallas=False` (the default on
-CPU hosts) routes to the oracle, `use_pallas=True` routes to the kernel
-(interpret=True on CPU, compiled on TPU). The vectorized CEMR engine and the
-LM serve path consume these through `make_intersect_fn` / `decode_attention`.
+Every op has a pure-jnp oracle in ref.py. Dispatch is backend-aware:
+`use_pallas=True` routes to the kernel, and `interpret=None` (the default)
+resolves automatically — compiled on TPU, interpret-mode elsewhere — so the
+same call site is the fast path on TPU and a correctness path on CPU. The
+vectorized CEMR engine and the LM serve path consume these through
+`make_intersect_fn` / `decode_attention`.
 """
 from __future__ import annotations
 
@@ -15,13 +17,27 @@ from .bitmap_intersect import bitmap_intersect_pallas
 from .flash_decode import flash_decode_pallas
 
 __all__ = ["bitmap_intersect", "flash_decode", "make_intersect_fn",
-           "decode_attention"]
+           "decode_attention", "default_interpret", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compiled on TPU, interpreted on CPU/GPU
+    hosts (where Mosaic cannot lower the kernel)."""
+    return not on_tpu()
 
 
 def bitmap_intersect(tables, idxs, *, use_pallas: bool = False,
-                     interpret: bool = True, words_per_block: int = 256):
+                     interpret: bool | None = None,
+                     words_per_block: int = 256):
     tables = tuple(tables)
     if use_pallas:
+        if interpret is None:
+            interpret = default_interpret()
         return bitmap_intersect_pallas(tables, idxs,
                                        words_per_block=words_per_block,
                                        interpret=interpret)
@@ -29,27 +45,31 @@ def bitmap_intersect(tables, idxs, *, use_pallas: bool = False,
 
 
 def flash_decode(q, k, v, lengths=None, *, use_pallas: bool = False,
-                 interpret: bool = True, block_s: int = 128):
+                 interpret: bool | None = None, block_s: int = 128):
     if use_pallas:
+        if interpret is None:
+            interpret = default_interpret()
         return flash_decode_pallas(q, k, v, lengths, block_s=block_s,
                                    interpret=interpret)
     return ref.flash_decode_ref(q, k, v, lengths)
 
 
-def make_intersect_fn(*, use_pallas: bool = True, interpret: bool = True):
+def make_intersect_fn(*, use_pallas: bool = True, interpret: bool | None = None):
     """Adapter for core.engine.VectorEngine(intersect_fn=...): takes the list
-    of gathered tables + (T, k) indices, returns the ANDed bitmap."""
+    of gathered tables + (T, k) indices and returns ``(R, pop)`` — the ANDed
+    bitmap *and* the kernel's fused per-row popcount ((T,) int32), so the
+    engine's contained-vertex prune never re-reduces R."""
 
     def fn(tables, idxs):
-        r, _pop = bitmap_intersect(tables, idxs, use_pallas=use_pallas,
-                                   interpret=interpret)
-        return r
+        r, pop = bitmap_intersect(tables, idxs, use_pallas=use_pallas,
+                                  interpret=interpret)
+        return r, pop.reshape(-1)
 
     return fn
 
 
 def decode_attention(q, k, v, lengths=None, *, use_pallas: bool = False,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """(B, H, D) single-token attention over a (B, S, Hkv, D) KV cache."""
     return flash_decode(q, k, v, lengths, use_pallas=use_pallas,
                         interpret=interpret)

@@ -49,7 +49,9 @@ def test_vector_limit_and_budget():
     assert full.count > 10
     capped = vector_match(query, data, limit=10, tile_rows=64)
     assert capped.count == 10
-    budget = vector_match(query, data, max_steps=1, limit=10**9, tile_rows=64)
+    # fused supersteps can finish a small query in one dispatch; a tiny tile
+    # forces chunked expansion so a 1-dispatch budget must time out
+    budget = vector_match(query, data, max_steps=1, limit=10**9, tile_rows=8)
     assert budget.timed_out
 
 
