@@ -1,4 +1,4 @@
-.PHONY: verify test bench bench-baseline perf-smoke
+.PHONY: verify test bench bench-baseline perf-smoke compile-bench compile-smoke
 
 verify:
 	bash scripts/ci.sh
@@ -9,10 +9,17 @@ test:
 bench:
 	PYTHONPATH=src python -m benchmarks.run --json BENCH_engine.json
 
-# regenerate the committed perf-smoke baseline (fig7 + scheduler rows)
+# regenerate the committed perf-smoke baselines (fig7 + scheduler + compile)
 bench-baseline:
 	PYTHONPATH=src python -m benchmarks.run --only fig7,sched --json benchmarks/BENCH_engine.json
+	PYTHONPATH=src python -m benchmarks.compile_bench --json benchmarks/BENCH_compile.json
 
 perf-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only fig7 --json /tmp/BENCH_new.json
 	PYTHONPATH=src python scripts/perf_smoke.py /tmp/BENCH_new.json benchmarks/BENCH_engine.json
+
+compile-bench:
+	PYTHONPATH=src python -m benchmarks.compile_bench --json /tmp/BENCH_compile_new.json
+
+compile-smoke: compile-bench
+	PYTHONPATH=src python scripts/perf_smoke.py --compile /tmp/BENCH_compile_new.json benchmarks/BENCH_compile.json

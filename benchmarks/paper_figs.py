@@ -16,14 +16,16 @@ def fig7_total_time(scale=0.03, limit=20_000):
     for name, data in load_datasets(scale).items():
         queries = make_queries(data, sizes=(4, 6), per_size=3)
         for method in ["cemr", "basic", "vector"]:
-            total, counts = 0.0, 0
+            total, counts, compile_s = 0.0, 0, 0.0
             for _, q in queries:
-                c, dt, _ = run_method(method, q, data, limit=limit)
+                c, dt, res = run_method(method, q, data, limit=limit)
                 total += dt
                 counts += c
-            rows.append(bench_row(f"fig7.{name}.{method}",
-                                  total / max(len(queries), 1),
-                                  f"emb={counts}"))
+                compile_s += getattr(res, "compile_s", 0.0)
+            nq = max(len(queries), 1)
+            rows.append(bench_row(f"fig7.{name}.{method}", total / nq,
+                                  f"emb={counts};"
+                                  f"compile_us={compile_s / nq * 1e6:.1f}"))
     return rows
 
 

@@ -19,7 +19,12 @@ def parse_rows(rows: list[str]) -> dict:
     out = {}
     for row in rows:
         name, us, derived = row.split(",", 2)
-        out[name] = {"us_per_call": float(us), "derived": derived}
+        entry = {"us_per_call": float(us), "derived": derived}
+        # structured compile timing (fig7 rows emit compile_us=<float>)
+        for part in derived.split(";"):
+            if part.startswith("compile_us="):
+                entry["compile_us"] = float(part.split("=", 1)[1])
+        out[name] = entry
     return out
 
 

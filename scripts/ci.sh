@@ -26,3 +26,10 @@ fi
 
 echo "== perf smoke (fig7 vector vs committed baseline) =="
 python scripts/perf_smoke.py "$bench_json" benchmarks/BENCH_engine.json
+
+echo "== compile bench (cold compile, vectorized vs reference) =="
+compile_json="$(mktemp /tmp/BENCH_compile_new.XXXXXX.json)"
+python -m benchmarks.compile_bench --json "$compile_json"
+
+echo "== compile smoke (vec/ref ratio gate) =="
+python scripts/perf_smoke.py --compile "$compile_json" benchmarks/BENCH_compile.json

@@ -1,8 +1,22 @@
 #!/usr/bin/env python
 """CI perf smoke: fail if the fig7 vector path regressed >2x vs the
-committed baseline.
+committed baseline, or if the vectorized compiler lost its speedup over
+the retained per-candidate reference.
 
 Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
+       python scripts/perf_smoke.py --compile NEW.json [BASELINE.json]
+
+Compile mode: both files are `benchmarks.compile_bench --json` outputs
+(rows compile.<ds>.vec / compile.<ds>.ref). The gated metric is the
+same-host ratio vec_us / ref_us: the aggregate fig7 compile workload must
+stay ≥ COMPILE_SPEEDUP_MIN (5x) faster than the reference cost profile,
+and each sufficiently large dataset individually ≥ COMPILE_SPEEDUP_MIN_DS
+(3x — a looser per-dataset tripwire, because single-dataset vec compiles
+are ms-scale and load-sensitive; a genuine regression to per-candidate
+behavior lands at ratio ≈ 1 and trips both). Datasets whose reference
+compile sits below COMPILE_FLOOR_US are too small to judge and are
+skipped; the committed-baseline ratio is printed for context but the gate
+is the absolute speedup, which is machine-independent by construction.
 
 Both files are `benchmarks.run --json` outputs. Absolute wall-clock differs
 across machines, so the guarded metric is the per-dataset ratio
@@ -31,6 +45,10 @@ import sys
 
 TOLERANCE = 1.75
 ABS_FLOOR_US = 1500.0
+COMPILE_SPEEDUP_MIN = 5.0        # aggregate fig7 compile workload
+COMPILE_SPEEDUP_MIN_DS = 3.0     # per-dataset regression tripwire (looser:
+                                 # ms-scale vec timings are load-sensitive)
+COMPILE_FLOOR_US = 10_000.0
 
 
 def load(path: str) -> dict:
@@ -55,12 +73,68 @@ def vector_ratios(rows: dict) -> dict[str, tuple[float, float]]:
     return out
 
 
+def compile_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
+    """dataset -> (vec/ref ratio, vec us, ref us)."""
+    out = {}
+    for name, row in rows.items():
+        parts = name.split(".")
+        if len(parts) != 3 or parts[0] != "compile" or parts[2] != "vec":
+            continue
+        ds = parts[1]
+        ref = rows.get(f"compile.{ds}.ref")
+        if not ref:
+            continue
+        out[ds] = (row["us_per_call"] / max(ref["us_per_call"], 1e-9),
+                   row["us_per_call"], ref["us_per_call"])
+    return out
+
+
+def main_compile(new_path: str, base_path: str) -> int:
+    new = compile_ratios(load(new_path))
+    base = compile_ratios(load(base_path))
+    if not new:
+        print("perf-smoke: no compile.<ds>.vec/ref row pairs found; "
+              "did benchmarks.compile_bench run with --json?")
+        return 2
+    ds_limit = 1.0 / COMPILE_SPEEDUP_MIN_DS
+    limit = 1.0 / COMPILE_SPEEDUP_MIN
+    failed = False
+    tot_vec = tot_ref = 0.0
+    for ds, (ratio, vec_us, ref_us) in sorted(new.items()):
+        tot_vec += vec_us
+        tot_ref += ref_us
+        ctx = (f" (baseline {base[ds][0]:.3f})" if ds in base else "")
+        if ref_us < COMPILE_FLOOR_US:
+            # sub-10ms reference compiles are fixed-cost dominated on both
+            # paths; the ratio says nothing about the compiler there
+            verdict = "ok (too small to judge)"
+        elif ratio > ds_limit:
+            verdict = "FAIL"
+            failed = True
+        else:
+            verdict = "ok"
+        print(f"perf-smoke: compile {ds}: vec/ref {ratio:.3f} "
+              f"({ref_us / max(vec_us, 1e-9):.1f}x, limit {ds_limit:.2f})"
+              f"{ctx} {verdict}")
+    # aggregate gate: the whole fig7 compile workload must stay ≥5x faster
+    tot_ratio = tot_vec / max(tot_ref, 1e-9)
+    tot_ok = tot_ratio <= limit
+    print(f"perf-smoke: compile TOTAL: vec/ref {tot_ratio:.3f} "
+          f"({tot_ref / max(tot_vec, 1e-9):.1f}x, limit {limit:.2f}) "
+          f"{'ok' if tot_ok else 'FAIL'}")
+    return 1 if (failed or not tot_ok) else 0
+
+
 def main() -> int:
-    if len(sys.argv) < 2:
+    args = [a for a in sys.argv[1:] if a != "--compile"]
+    if not args:
         print(__doc__)
         return 2
-    new_path = sys.argv[1]
-    base_path = sys.argv[2] if len(sys.argv) > 2 else \
+    if "--compile" in sys.argv[1:]:
+        return main_compile(args[0], args[1] if len(args) > 1 else
+                            "benchmarks/BENCH_compile.json")
+    new_path = args[0]
+    base_path = args[1] if len(args) > 1 else \
         "benchmarks/BENCH_engine.json"
     new_ratios = vector_ratios(load(new_path))
     base_ratios = vector_ratios(load(base_path))

@@ -3,9 +3,11 @@
 The paper's experimental protocol (§7.1.2) and the serving posture both run
 thousands of queries against one data graph. Everything that is query-
 independent — CSR adjacency, the label index, degree vectors, the NLF
-neighbor-label histogram — is built here exactly once and shared by every
-Matcher/query; per-(query, data) artifacts (candidate spaces, packed bitmap
-adjacency, matching plans) are cached downstream in Matcher's plan cache.
+neighbor-label histogram, and the label-sorted CSR that turns compatible-
+neighbor selection into pure gathers (docs/compile.md) — is built here
+exactly once and shared by every Matcher/query; per-(query, data) artifacts
+(candidate spaces, CSR auxiliary structures, bitmap plans) are cached
+downstream in Matcher's plan cache.
 """
 from __future__ import annotations
 

@@ -50,11 +50,14 @@ class MatchOutcome:
 
     count: int
     engine: str                       # "ref" | "vector" (resolved)
-    elapsed_s: float
+    elapsed_s: float                  # enumeration time (excludes compile)
     timed_out: bool
     stats: object                     # MatchStats (ref) | VectorStats (vector)
     embeddings: list[dict[int, int]] | None = None
     plan_cached: bool = False         # this call hit the plan cache
+    compile_s: float = 0.0            # time this call spent compiling
+                                      # (filtering + analysis + vector plan
+                                      # build; ~0 on a plan-cache hit)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,9 +228,14 @@ class Matcher:
         full MatchOptions or keyword overrides of the Matcher defaults."""
         opts = self._resolve_options(options, overrides)
         hits_before = self._hits
+        t0 = time.perf_counter()
         cq = self.compile(query, opts)
         cached = self._hits > hits_before
         engine = cq.resolve_engine(opts.engine)
+        if engine == "vector" and not cq.empty:
+            _ = cq.plan               # force the lazy plan build (bitmap
+                                      # tables) inside the compile_s window
+        compile_s = time.perf_counter() - t0
         if cq.empty:
             if engine == "ref":
                 from repro.core.ref_engine import MatchStats
@@ -238,7 +246,7 @@ class Matcher:
             return MatchOutcome(count=0, engine=engine, elapsed_s=0.0,
                                 timed_out=False, stats=stats,
                                 embeddings=[] if opts.materialize else None,
-                                plan_cached=cached)
+                                plan_cached=cached, compile_s=compile_s)
         if engine == "ref":
             res = cemr_match(query, self.dataset.graph,
                              preprocessed=(cq.cs, cq.an),
@@ -249,7 +257,8 @@ class Matcher:
             return MatchOutcome(count=res.count, engine="ref",
                                 elapsed_s=res.elapsed_s,
                                 timed_out=res.timed_out, stats=res.stats,
-                                embeddings=res.embeddings, plan_cached=cached)
+                                embeddings=res.embeddings, plan_cached=cached,
+                                compile_s=compile_s)
         eng = cq.vector_engine(opts, intersect_fn=self._intersect_fn)
         t0 = time.perf_counter()
         res = eng.run(limit=opts.limit, max_steps=opts.budget,
@@ -257,7 +266,8 @@ class Matcher:
         return MatchOutcome(count=res.count, engine="vector",
                             elapsed_s=time.perf_counter() - t0,
                             timed_out=res.timed_out, stats=res.stats,
-                            embeddings=res.embeddings, plan_cached=cached)
+                            embeddings=res.embeddings, plan_cached=cached,
+                            compile_s=compile_s)
 
     def stream(self, query: Graph, options: MatchOptions | None = None,
                **overrides) -> Iterator[dict[int, int]]:

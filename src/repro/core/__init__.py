@@ -3,9 +3,12 @@
 Module map (public entry point is `repro.api`, not this package):
 
   graph       host-side CSR graphs, generators, random-walk queries
-  filtering   LDF/NLF + candidate space + bitmap auxiliary structure;
-              DataGraphIndex = query-independent preprocessing shared
-              across queries (owned by repro.api.Dataset)
+  filtering   vectorized compile pipeline: LDF/NLF + refinement + CSR
+              auxiliary structure + bitmap packing; DataGraphIndex =
+              query-independent preprocessing (label-sorted CSR, NLF
+              histogram) shared across queries (owned by repro.api.Dataset)
+  filtering_ref  retained per-candidate compiler: differential oracle for
+              the vectorized pipeline + cold-compile baseline
   ordering    matching orders (Eq. 2-3 + ablation orders)
   encoding    black-white encoding (Eq. 4-5) + static query analysis
   plan        MatchingPlan: compile-time metadata + device bitmap tables
@@ -25,6 +28,7 @@ import warnings
 
 from .filtering import (CandidateSpace, DataGraphIndex, build_candidate_space,
                         build_data_index, pack_bitmap_adjacency)
+from .filtering_ref import build_candidate_space_reference
 from .graph import (Graph, build_graph, random_walk_query, synthetic_dataset,
                     synthetic_labeled_graph)
 from .ref_engine import MatchResult, MatchStats, preprocess
@@ -33,7 +37,8 @@ from .ref_engine import cemr_match as _cemr_match
 __all__ = [
     "Graph", "build_graph", "random_walk_query", "synthetic_dataset",
     "synthetic_labeled_graph", "CandidateSpace", "DataGraphIndex",
-    "build_candidate_space", "build_data_index", "pack_bitmap_adjacency",
+    "build_candidate_space", "build_candidate_space_reference",
+    "build_data_index", "pack_bitmap_adjacency",
     "MatchResult", "MatchStats", "cemr_match", "vector_match", "preprocess",
 ]
 

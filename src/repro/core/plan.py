@@ -102,17 +102,18 @@ def build_plan(cs: CandidateSpace, an: QueryAnalysis) -> MatchingPlan:
         masks[u] = _bitmap_from_positions(pos, words[lbl])
 
     # ---- adjacency tables in shared-space coordinates ------------------------
+    # one vectorized scatter per query edge, straight from the CSR adjacency
     tables: dict[tuple[int, int], np.ndarray] = {}
-    for (u, w), rows in cs.adj.items():
+    for (u, w), ptr in cs.adj_indptr.items():
         lu, lw = label_of[u], label_of[w]
         src_pos = _space_pos(spaces[lu], cs.cand[u])
         tbl = np.zeros((spaces[lu].shape[0], words[lw]), dtype=np.uint32)
-        tgt_pos_of_cand = _space_pos(spaces[lw], cs.cand[w])
-        for c, row in enumerate(rows):
-            if row.shape[0] == 0:
-                continue
-            tpos = tgt_pos_of_cand[row]
-            np.bitwise_or.at(tbl[src_pos[c]], tpos >> 5,
+        cols = cs.adj_indices[(u, w)].astype(np.int64)
+        if cols.shape[0]:
+            tgt_pos_of_cand = _space_pos(spaces[lw], cs.cand[w])
+            rows = np.repeat(src_pos, np.diff(ptr))
+            tpos = tgt_pos_of_cand[cols]
+            np.bitwise_or.at(tbl, (rows, tpos >> 5),
                              np.uint32(1) << (tpos & 31).astype(np.uint32))
         tables[(u, w)] = tbl
 

@@ -96,7 +96,8 @@ class _Search:
                  step_budget: int | None, materialize: bool):
         self.cs, self.an = cs, an
         self.cand = cs.cand
-        self.adj = cs.adj
+        self.adj_indptr = cs.adj_indptr
+        self.adj_indices = cs.adj_indices
         self.labels = cs.query.labels
         self.use_cer, self.use_cv, self.use_fs = use_cer, use_cv, use_fs
         self.limit = limit
@@ -118,7 +119,8 @@ class _Search:
 
     # ---------------------------------------------------------------- helpers
     def _row(self, u_from: int, u_to: int, idx: int) -> np.ndarray:
-        return self.adj[(u_from, u_to)][idx]
+        ptr = self.adj_indptr[(u_from, u_to)]
+        return self.adj_indices[(u_from, u_to)][ptr[idx]:ptr[idx + 1]]
 
     def _intersect_rows(self, rows: list[np.ndarray]) -> np.ndarray:
         rows = sorted(rows, key=lambda r: r.shape[0])

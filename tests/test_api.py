@@ -92,6 +92,22 @@ def test_compile_same_query_twice_builds_plan_once(monkeypatch):
     assert info.misses == 1 and info.hits >= 1 and info.size == 1
 
 
+def test_compile_s_reported_for_both_engines():
+    data, query = fig1_pair()
+    m = Matcher(Dataset.from_graph(data))
+    for engine in ("ref", "vector"):
+        m.clear_cache()
+        cold = m.count(query, engine=engine, limit=10**9)
+        warm = m.count(query, engine=engine, limit=10**9)
+        assert cold.compile_s > 0.0, engine
+        assert not cold.plan_cached and warm.plan_cached
+        # a cache hit skips filtering/analysis/plan build entirely; bound it
+        # absolutely rather than against cold's wall clock (timing flake)
+        assert warm.compile_s < 0.05, engine
+        # elapsed_s is enumeration only: both fields are reported separately
+        assert warm.elapsed_s >= 0.0 and warm.count == cold.count
+
+
 def test_plan_cache_keyed_by_plan_relevant_options():
     data, query = fig1_pair()
     m = Matcher(Dataset.from_graph(data))

@@ -101,16 +101,21 @@ def test_bitmap_pack_roundtrip(pair):
         return
     cs = build_candidate_space(query, data)
     bms = pack_bitmap_adjacency(cs)
-    for (u, w), rows in cs.adj.items():
+    for (u, w), ptr in cs.adj_indptr.items():
         bm = bms[(u, w)]
-        for c, row in enumerate(rows):
+        k_u = cs.cand[u].shape[0]
+        assert bm.shape[0] == k_u            # no phantom row when |C(u)| == 0
+        assert ptr.shape[0] == k_u + 1
+        for c in range(k_u):
+            row = cs.adj_row(u, w, c)
             got = []
             for j in range(bm.shape[1]):
                 word = int(bm[c, j])
                 for b in range(32):
                     if word >> b & 1:
                         got.append(32 * j + b)
-            assert got == sorted(row.tolist())
+            assert got == row.tolist()
+            assert row.shape[0] <= 1 or bool(np.all(np.diff(row) > 0))
 
 
 @settings(max_examples=20, deadline=None)
