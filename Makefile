@@ -1,18 +1,24 @@
-.PHONY: verify test bench bench-baseline perf-smoke compile-bench compile-smoke
+.PHONY: verify test test-tier2 bench bench-baseline perf-smoke compile-bench \
+	compile-smoke batch-bench batch-smoke
 
 verify:
 	bash scripts/ci.sh
 
 test:
-	PYTHONPATH=src python -m pytest -x -q
+	PYTHONPATH=src python -m pytest -x -q -m "not tier2"
+
+test-tier2:
+	PYTHONPATH=src python -m pytest -q -m tier2 --durations=10
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run --json BENCH_engine.json
 
-# regenerate the committed perf-smoke baselines (fig7 + scheduler + compile)
+# regenerate the committed perf-smoke baselines (fig7 + scheduler + compile
+# + batch)
 bench-baseline:
 	PYTHONPATH=src python -m benchmarks.run --only fig7,sched --json benchmarks/BENCH_engine.json
 	PYTHONPATH=src python -m benchmarks.compile_bench --json benchmarks/BENCH_compile.json
+	PYTHONPATH=src python -m benchmarks.batch_bench --json benchmarks/BENCH_batch.json
 
 perf-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only fig7 --json /tmp/BENCH_new.json
@@ -23,3 +29,9 @@ compile-bench:
 
 compile-smoke: compile-bench
 	PYTHONPATH=src python scripts/perf_smoke.py --compile /tmp/BENCH_compile_new.json benchmarks/BENCH_compile.json
+
+batch-bench:
+	PYTHONPATH=src python -m benchmarks.batch_bench --json /tmp/BENCH_batch_new.json
+
+batch-smoke: batch-bench
+	PYTHONPATH=src python scripts/perf_smoke.py --batch /tmp/BENCH_batch_new.json benchmarks/BENCH_batch.json

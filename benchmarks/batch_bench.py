@@ -1,0 +1,95 @@
+"""Cross-query superbatch benchmark: batched vs sequential `match_many`.
+
+Evidence for the superbatch scheduler's acceptance criterion: on a
+fig7-style 32-query workload per dataset (the shared `fig7_workloads` query
+mix, cycled to 32 entries — a serving-shaped workload where many users
+submit structurally repeated queries, exactly what the plan cache and
+signature bucketing exist for), warm queries/sec and device dispatches per
+query for
+
+  * `seq`     — sequential match_many (batch="off"): per-query supersteps,
+  * `batched` — superbatch match_many (batch="auto"): plans bucketed by
+    shape signature, one jitted dispatch advancing every query in a bucket.
+
+Rows: batch.<dataset>.<mode>,us_per_query,qps=..;dispatches_per_query=..
+(batched rows add batched_queries=..;bucket_recompiles=..).
+
+  PYTHONPATH=src python -m benchmarks.batch_bench                 # print CSV
+  PYTHONPATH=src python -m benchmarks.batch_bench --json [PATH]   # + JSON
+                                                 (default BENCH_batch.json)
+
+`scripts/perf_smoke.py --batch` gates the same-host batched/seq ratio
+against the committed benchmarks/BENCH_batch.json baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.api import MatchOptions
+
+from .common import bench_row, fig7_workloads, matcher_for
+
+N_QUERIES = 32
+
+
+def batch_queries(queries, n=N_QUERIES):
+    """Cycle the fig7 query mix out to an n-query serving workload."""
+    qs = [q for _, q in queries]
+    return [qs[i % len(qs)] for i in range(n)] if qs else []
+
+
+def batch_throughput(scale=0.03, limit=20_000, rounds=3):
+    rows = []
+    opts = MatchOptions(engine="vector", tile_rows=512, limit=limit)
+    for name, (data, sized) in fig7_workloads(scale).items():
+        queries = batch_queries(sized)
+        if len(queries) < 2:
+            continue
+        m = matcher_for(data)
+        for label, mode in (("seq", "off"), ("batched", "auto")):
+            m.match_many(queries, opts, batch=mode)     # warm: compile + jit
+            best, steps, extra = None, 0, ""
+            for _ in range(rounds):
+                t0 = time.perf_counter()
+                outs = m.match_many(queries, opts, batch=mode)
+                dt = time.perf_counter() - t0
+                if best is None or dt < best:           # min: spikes only
+                    best = dt                           # ever inflate timings
+                    stats = {id(o.stats): o.stats for o in outs}.values()
+                    steps = sum(s.device_steps for s in stats)
+                    if mode == "auto":
+                        extra = (
+                            f";batched_queries="
+                            f"{sum(s.batched_queries for s in stats)}"
+                            f";bucket_recompiles="
+                            f"{sum(s.bucket_recompiles for s in stats)}")
+            nq = len(queries)
+            rows.append(bench_row(
+                f"batch.{name}.{label}", best / nq,
+                f"qps={nq / best:.1f};dispatches_per_query={steps / nq:.2f}"
+                + extra))
+    return rows
+
+
+def main() -> None:
+    from .run import parse_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_batch.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to PATH (default BENCH_batch.json)")
+    args = ap.parse_args()
+    rows = batch_throughput(scale=0.08 if args.full else 0.03)
+    print("name,us_per_query,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": parse_rows(rows)}, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

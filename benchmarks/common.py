@@ -33,6 +33,18 @@ def make_queries(data, sizes=(4, 6, 8), per_size=5, seed=0):
     return out
 
 
+def fig7_workloads(scale=DEFAULT_SCALE, *, names=None, sizes=(4, 6),
+                   per_size=3, seed=0):
+    """The fig7-style CI workload every engine/compile/batch benchmark
+    shares: dataset name -> (data graph, [(qsize, query), ...]). One
+    definition so new benchmarks cannot drift from the perf-smoke
+    baselines' datasets and query mix."""
+    return OrderedDict(
+        (name, (data, make_queries(data, sizes=sizes, per_size=per_size,
+                                   seed=seed)))
+        for name, data in load_datasets(scale, names).items())
+
+
 METHODS = {
     # paper-faithful CEMR and its ablations (reference DFS engine)
     "cemr": dict(encoding="cost", use_cer=True, use_cv=True, use_fs=True),

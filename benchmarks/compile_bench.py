@@ -31,7 +31,7 @@ from repro.core.filtering_ref import build_candidate_space_reference
 from repro.core.ordering import cemr_order
 from repro.core.plan import build_plan
 
-from .common import bench_row, load_datasets, make_queries
+from .common import bench_row, fig7_workloads
 
 _BUILDERS = {
     "vec": build_candidate_space,
@@ -55,9 +55,8 @@ def _compile_once(query, data, index, builder) -> tuple[float, int]:
 
 def compile_cold(scale=0.15, repeats=3) -> list[str]:
     rows = []
-    for name, data in load_datasets(scale).items():
+    for name, (data, queries) in fig7_workloads(scale).items():
         ds = Dataset.from_graph(data, name=name)
-        queries = make_queries(data, sizes=(4, 6), per_size=3)
         nq = max(len(queries), 1)
         for variant, builder in _BUILDERS.items():
             total, cand_rows = 0.0, 0

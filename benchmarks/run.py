@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from . import paper_figs, scheduler_bench
+from . import batch_bench, paper_figs, scheduler_bench
 
 
 def parse_rows(rows: list[str]) -> dict:
@@ -52,6 +52,7 @@ def main() -> None:
         "sched": lambda: (scheduler_bench.sched_supersteps(scale=scale)
                           + scheduler_bench.sched_session(
                               scale=max(scale, 0.05))),
+        "batch": lambda: batch_bench.batch_throughput(scale=scale),
     }
     only = set(args.only.split(",")) if args.only else None
     collected: list[str] = []

@@ -16,15 +16,14 @@ from __future__ import annotations
 
 from repro.api import MatchOptions
 
-from .common import bench_row, load_datasets, make_queries, matcher_for
+from .common import bench_row, fig7_workloads, matcher_for
 
 
 def sched_supersteps(scale=0.03, limit=20_000):
     rows = []
     fused = MatchOptions(engine="vector", tile_rows=512, limit=limit)
     compat = fused.replace(use_cer_buffer=False)
-    for name, data in load_datasets(scale).items():
-        queries = make_queries(data, sizes=(4, 6), per_size=3)
+    for name, (data, queries) in fig7_workloads(scale).items():
         m = matcher_for(data)
         for label, opts in (("fused", fused), ("compat", compat)):
             total, steps, ss, hits, misses = 0.0, 0, 0, 0, 0
@@ -51,10 +50,10 @@ def sched_session(scale=0.05, limit=20_000, rounds=3):
     import time
 
     rows = []
-    data = load_datasets(scale, names=["yeast"])["yeast"]
+    data, sized = fig7_workloads(scale, names=["yeast"])["yeast"]
     m = matcher_for(data)
     opts = MatchOptions(engine="vector", tile_rows=512, limit=limit)
-    queries = [q for _, q in make_queries(data, sizes=(4, 6), per_size=3)]
+    queries = [q for _, q in sized]
     for q in queries:
         m.count(q, opts)                         # cold compile
     t0 = time.perf_counter()

@@ -8,8 +8,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 pytest =="
 # Two LM-side tests fail at the seed commit (tracked in CHANGES.md) and are
 # unrelated to the matching engines; deselect them so the gate is green on a
-# healthy tree and red only on new breakage.
-python -m pytest -x -q \
+# healthy tree and red only on new breakage. tier2 (hypothesis-heavy) tests
+# run as a separate non-blocking CI job — see .github/workflows/ci.yml.
+python -m pytest -x -q -m "not tier2" \
     --deselect tests/test_dryrun_small.py::test_engine_cell_compiles_on_small_mesh \
     --deselect tests/test_fault_tolerance.py::test_supervisor_recovers_from_injected_faults
 
@@ -33,3 +34,10 @@ python -m benchmarks.compile_bench --json "$compile_json"
 
 echo "== compile smoke (vec/ref ratio gate) =="
 python scripts/perf_smoke.py --compile "$compile_json" benchmarks/BENCH_compile.json
+
+echo "== batch bench (superbatched vs sequential match_many) =="
+batch_json="$(mktemp /tmp/BENCH_batch_new.XXXXXX.json)"
+python -m benchmarks.batch_bench --json "$batch_json"
+
+echo "== batch smoke (batched/seq queries-per-second gate) =="
+python scripts/perf_smoke.py --batch "$batch_json" benchmarks/BENCH_batch.json

@@ -1,10 +1,24 @@
 #!/usr/bin/env python
 """CI perf smoke: fail if the fig7 vector path regressed >2x vs the
-committed baseline, or if the vectorized compiler lost its speedup over
-the retained per-candidate reference.
+committed baseline, if the vectorized compiler lost its speedup over
+the retained per-candidate reference, or if superbatched match_many lost
+its throughput multiplier over the sequential path.
 
 Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --compile NEW.json [BASELINE.json]
+       python scripts/perf_smoke.py --batch NEW.json [BASELINE.json]
+
+Batch mode: both files are `benchmarks.batch_bench --json` outputs (rows
+batch.<ds>.seq / batch.<ds>.batched). The gated metric is the same-host
+ratio batched_us / seq_us per dataset — machine-independent by
+construction. The gate: the mean per-dataset ratio must stay ≤
+1/BATCH_SPEEDUP_MIN (the ≥2x queries/sec criterion, averaged so one
+enumeration-heavy dataset where batching only breaks even cannot mask a
+regression on the dispatch-bound ones), and no dataset may regress past
+BATCH_REGRESS_MAX (batched slower than sequential by >25% = the query-id
+lane stopped paying for itself there). Datasets whose sequential row sits
+below BATCH_FLOOR_US per query are noise-regime and skipped; the
+committed-baseline ratio prints for context only.
 
 Compile mode: both files are `benchmarks.compile_bench --json` outputs
 (rows compile.<ds>.vec / compile.<ds>.ref). The gated metric is the
@@ -49,6 +63,9 @@ COMPILE_SPEEDUP_MIN = 5.0        # aggregate fig7 compile workload
 COMPILE_SPEEDUP_MIN_DS = 3.0     # per-dataset regression tripwire (looser:
                                  # ms-scale vec timings are load-sensitive)
 COMPILE_FLOOR_US = 10_000.0
+BATCH_SPEEDUP_MIN = 2.0          # mean queries/sec multiplier, batched vs seq
+BATCH_REGRESS_MAX = 1.25         # no dataset may run >25% slower batched
+BATCH_FLOOR_US = 150.0           # per-query; below this both rows are noise
 
 
 def load(path: str) -> dict:
@@ -89,6 +106,59 @@ def compile_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
     return out
 
 
+def batch_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
+    """dataset -> (batched/seq ratio, batched us, seq us)."""
+    out = {}
+    for name, row in rows.items():
+        parts = name.split(".")
+        if len(parts) != 3 or parts[0] != "batch" or parts[2] != "batched":
+            continue
+        ds = parts[1]
+        seq = rows.get(f"batch.{ds}.seq")
+        if not seq:
+            continue
+        out[ds] = (row["us_per_call"] / max(seq["us_per_call"], 1e-9),
+                   row["us_per_call"], seq["us_per_call"])
+    return out
+
+
+def main_batch(new_path: str, base_path: str) -> int:
+    new = batch_ratios(load(new_path))
+    base = batch_ratios(load(base_path))
+    if not new:
+        print("perf-smoke: no batch.<ds>.seq/batched row pairs found; "
+              "did benchmarks.batch_bench run with --json?")
+        return 2
+    failed = False
+    judged = []
+    for ds, (ratio, bat_us, seq_us) in sorted(new.items()):
+        ctx = (f" (baseline {base[ds][0]:.3f})" if ds in base else "")
+        if seq_us < BATCH_FLOOR_US:
+            verdict = "ok (below noise floor)"
+        elif ratio > BATCH_REGRESS_MAX:
+            verdict = "FAIL (batched slower than sequential)"
+            failed = True
+        else:
+            judged.append(ratio)
+            verdict = "ok"
+        print(f"perf-smoke: batch {ds}: batched/seq {ratio:.3f} "
+              f"({seq_us / max(bat_us, 1e-9):.1f}x qps){ctx} {verdict}")
+    limit = 1.0 / BATCH_SPEEDUP_MIN
+    if not judged:
+        # every dataset sat below the noise floor: there is no signal to
+        # gate on, which is not a regression (the per-row lines already
+        # said ok) — report and pass rather than failing on an empty mean
+        print("perf-smoke: batch MEAN: no dataset above noise floor; "
+              "mean gate skipped")
+        return 1 if failed else 0
+    mean = sum(judged) / len(judged)
+    mean_ok = mean <= limit
+    print(f"perf-smoke: batch MEAN: batched/seq {mean:.3f} "
+          f"({1.0 / max(mean, 1e-9):.1f}x qps, limit {limit:.2f}) "
+          f"{'ok' if mean_ok else 'FAIL'}")
+    return 1 if (failed or not mean_ok) else 0
+
+
 def main_compile(new_path: str, base_path: str) -> int:
     new = compile_ratios(load(new_path))
     base = compile_ratios(load(base_path))
@@ -126,13 +196,16 @@ def main_compile(new_path: str, base_path: str) -> int:
 
 
 def main() -> int:
-    args = [a for a in sys.argv[1:] if a != "--compile"]
+    args = [a for a in sys.argv[1:] if a not in ("--compile", "--batch")]
     if not args:
         print(__doc__)
         return 2
     if "--compile" in sys.argv[1:]:
         return main_compile(args[0], args[1] if len(args) > 1 else
                             "benchmarks/BENCH_compile.json")
+    if "--batch" in sys.argv[1:]:
+        return main_batch(args[0], args[1] if len(args) > 1 else
+                          "benchmarks/BENCH_batch.json")
     new_path = args[0]
     base_path = args[1] if len(args) > 1 else \
         "benchmarks/BENCH_engine.json"

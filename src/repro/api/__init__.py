@@ -15,12 +15,13 @@ docs/api.md for the migration guide.
 from .dataset import Dataset
 from .matcher import (AUTO_VECTOR_MIN_ROWS, CacheInfo, CompiledQuery,
                       Matcher, MatchOutcome)
-from .options import (ENCODINGS, ENGINES, INTERSECT_MODES, ORDER_HEURISTICS,
-                      MatchOptions)
+from .options import (BATCH_MODES, ENCODINGS, ENGINES, INTERSECT_MODES,
+                      ORDER_HEURISTICS, MatchOptions)
 from .signature import graph_signature
 
 __all__ = [
     "Dataset", "Matcher", "MatchOptions", "MatchOutcome", "CompiledQuery",
     "CacheInfo", "graph_signature", "AUTO_VECTOR_MIN_ROWS",
     "ENGINES", "ENCODINGS", "ORDER_HEURISTICS", "INTERSECT_MODES",
+    "BATCH_MODES",
 ]

@@ -15,11 +15,15 @@ import dataclasses
 from repro.core.plan import INTERSECT_MODES
 
 __all__ = ["MatchOptions", "ENGINES", "ENCODINGS", "ORDER_HEURISTICS",
-           "INTERSECT_MODES"]
+           "INTERSECT_MODES", "BATCH_MODES"]
 
 ENGINES = ("ref", "vector", "auto")
 ENCODINGS = ("cost", "all_black", "all_white", "case12")
 ORDER_HEURISTICS = ("cemr", "ri", "gql")
+# Matcher.match_many / MatchQueueRuntime.run batching vocabulary: "auto"
+# drains vector-engine queries through cross-query superbatches bucketed by
+# plan shape signature; "off" forces the sequential per-query path.
+BATCH_MODES = ("auto", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,7 +44,10 @@ class MatchOptions:
     use_dedup       : brother-embedding dedup / CER (vector engine only).
     use_cer_buffer  : cross-tile CER ring buffer (vector engine; False
                       selects the stage-at-a-time compat loop, which uses
-                      the per-tile bucketed compute when use_dedup is on).
+                      the per-tile bucketed compute when use_dedup is on;
+                      on the superbatched match_many path False merely
+                      disables the ring buffer — batched supersteps stay
+                      fused).
     cer_buffer_slots: ring-buffer capacity per CER-enabled stage.
     pack_tiles      : merge sub-capacity sibling frontiers before dispatch
                       (frontier compaction; vector engine only).

@@ -70,6 +70,8 @@ class VectorStats:
     cer_misses: int = 0
     bucketed_tiles: int = 0          # per-tile CER bucketed computes (compat path)
     packed_tiles: int = 0            # sibling-tile merges (frontier compaction)
+    batched_queries: int = 0         # queries advanced by this superbatch run
+    bucket_recompiles: int = 0       # batched supersteps jitted fresh this run
     leaf_tiles: int = 0
     leaf_overflows: int = 0          # uint64 leaf reductions that fell back to host
     peak_stack: int = 0

@@ -39,8 +39,19 @@ and the host loop thin:
 The per-tile bucketed CER compute (engine._bucket_compute_fn) survives as a
 compat path (`use_dedup=True, use_cer_buffer=False`), running the legacy
 stage-at-a-time loop with corrected step accounting.
+
+A fifth mechanism generalizes the other four **across queries**: the
+cross-query superbatch (BatchProgram + SuperbatchScheduler, bottom of this
+module) buckets compiled plans by canonical shape signature
+(plan.plan_shape_signature) and advances every query in a bucket through
+shared jitted supersteps — tiles gain a query-id lane, adjacency gathers
+route through stacked per-query tables, CER keys are prefixed with the
+query id, and leaf counts segment-sum per query on device. See
+docs/engine.md §Cross-query superbatching.
 """
 from __future__ import annotations
+
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -51,8 +62,9 @@ from . import bitops
 from .engine import VectorMatchResult, VectorStats
 from .plan import IDX, LevelOp
 
-__all__ = ["TileScheduler", "leaf_count_host", "make_leaf_reduce",
-           "OVERFLOW_LIMIT"]
+__all__ = ["TileScheduler", "SuperbatchScheduler", "BatchProgram",
+           "leaf_count_host", "make_leaf_reduce", "make_leaf_reduce_batched",
+           "stack_batch_inputs", "OVERFLOW_LIMIT"]
 
 # Conservative magnitude bound for the on-device int64 leaf reduction: every
 # per-row product and the tile sum are bounded by a float64 upper bound; if
@@ -92,13 +104,12 @@ def leaf_count_host(leaf_singles, leaf_groups, terms, alive):
     return int(counts.sum())
 
 
-def make_leaf_reduce(leaf_singles, leaf_groups):
-    """Device leaf reduction: (terms (T, n) int32, alive (T,) bool) ->
-    (count () int64, overflow () bool). Must be traced under enable_x64()."""
-    n_singles = len(leaf_singles)
-    group_sizes = [len(g) for g in leaf_groups]
+def _leaf_products(n_singles, group_sizes):
+    """Per-row inclusion-exclusion products for the device leaf reduction:
+    terms (T, n) int32 -> (per (T,) int64, bound (T,) float64). `bound` is a
+    conservative float64 magnitude bound on `per` (see OVERFLOW_LIMIT)."""
 
-    def reduce(terms, alive):
+    def products(terms):
         t64 = terms.astype(jnp.int64)
         f64 = terms.astype(jnp.float64)
         per = jnp.ones(terms.shape[0], jnp.int64)
@@ -127,10 +138,40 @@ def make_leaf_reduce(leaf_singles, leaf_groups):
                 bound = bound * (f64[:, k] * f64[:, k + 1] * f64[:, k + 2]
                                  + 2.0 * f64[:, k + 6])
                 k += 7
+        return per, bound
+
+    return products
+
+
+def make_leaf_reduce(leaf_singles, leaf_groups):
+    """Device leaf reduction: (terms (T, n) int32, alive (T,) bool) ->
+    (count () int64, overflow () bool). Must be traced under enable_x64()."""
+    products = _leaf_products(len(leaf_singles), [len(g) for g in leaf_groups])
+
+    def reduce(terms, alive):
+        per, bound = products(terms)
         bound = jnp.where(alive, bound, 0.0)
         overflow = bound.sum() >= OVERFLOW_LIMIT
         count = jnp.where(alive, per, 0).sum()
         return count, overflow
+
+    return reduce
+
+
+def make_leaf_reduce_batched(leaf_singles, leaf_groups, n_queries):
+    """Superbatch leaf reduction with a query-id lane:
+    (terms (T, n) int32, alive (T,) bool, qid (T,) int32) ->
+    (count (Q,) int64 segment-summed per query, overflow (Q,) bool).
+    Must be traced under enable_x64()."""
+    products = _leaf_products(len(leaf_singles), [len(g) for g in leaf_groups])
+
+    def reduce(terms, alive, qid):
+        per, bound = products(terms)
+        per = jnp.where(alive, per, 0)
+        bound = jnp.where(alive, bound, 0.0)
+        count_q = jnp.zeros(n_queries, jnp.int64).at[qid].add(per)
+        bound_q = jnp.zeros(n_queries, jnp.float64).at[qid].add(bound)
+        return count_q, bound_q >= OVERFLOW_LIMIT
 
     return reduce
 
@@ -150,18 +191,20 @@ def _init_cer_buffer(n_slots: int, key_width: int, n_words: int):
     }
 
 
-def _cer_compute(op: LevelOp, compute_r, tile, buf, tables, masks):
+def _cer_compute(keys, compute, tile, buf):
     """Buffered extension compute for one CER-enabled stage.
 
-    The buffer caches (key = read-set columns) -> (R after same-label bit
-    clearing, popcount) *before* any aliveness masking, so a value written by
-    one tile is valid for every brother row in any sibling tile. Lookup is
-    hash-first — one (T, K) int32 compare, then exact-key verification of the
-    single candidate slot — so a hash collision can only cause a miss
-    (recompute), never a wrong hit. Returns
+    The buffer caches (key = read-set columns, stacked by the caller — the
+    superbatch path prepends the query-id lane so reuse never crosses
+    queries) -> (R after same-label bit clearing, popcount) *before* any
+    aliveness masking, so a value written by one tile is valid for every
+    brother row in any sibling tile. Lookup is hash-first — one (T, K) int32
+    compare, then exact-key verification of the single candidate slot — so a
+    hash collision can only cause a miss (recompute), never a wrong hit.
+    `compute` is a zero-argument thunk running the stage's extension compute
+    on the whole tile. Returns
     (r, pop, new_buf, (hits, misses, seen, inserted))."""
     alive = tile["alive"]
-    keys = jnp.stack([tile["idx"][:, s] for s in op.dedup_slots], axis=1)
     h = jnp.zeros(keys.shape[0], jnp.int32)
     for j in range(keys.shape[1]):
         h = h * jnp.int32(1000003) + keys[:, j]          # wraps: fine
@@ -177,7 +220,7 @@ def _cer_compute(op: LevelOp, compute_r, tile, buf, tables, masks):
     n_words = buf["vals"].shape[1]
 
     def _compute(_):
-        return compute_r(tile, tables, masks)
+        return compute()
 
     def _skip(_):
         return (jnp.zeros((keys.shape[0], n_words), jnp.uint32),
@@ -332,8 +375,11 @@ class TileScheduler:
         def run_compute(si, op, compute_r, con, tile, bufs, acc, tables,
                         masks):
             if si in bufs:
-                r, pop, bufs[si], s = _cer_compute(op, compute_r, tile,
-                                                   bufs[si], tables, masks)
+                keys = jnp.stack([tile["idx"][:, s] for s in op.dedup_slots],
+                                 axis=1)
+                r, pop, bufs[si], s = _cer_compute(
+                    keys, lambda: compute_r(tile, tables, masks), tile,
+                    bufs[si])
                 acc = [a + v for a, v in zip(acc, s)]
             else:
                 r, pop = compute_r(tile, tables, masks)
@@ -656,3 +702,570 @@ class TileScheduler:
         return VectorMatchResult(count=min(count, limit), stats=st,
                                  timed_out=timed_out,
                                  embeddings=embeddings if materialize else None)
+
+
+# ---------------------------------------------------------------------------
+# cross-query superbatch
+# ---------------------------------------------------------------------------
+# `Matcher.match_many(batch="auto")` buckets compiled plans by
+# `plan.plan_shape_signature` (vertices renamed to their match level, bitmap
+# widths padded to powers of two) and drains each bucket through one
+# SuperbatchScheduler: tiles gain a query-id lane, every adjacency gather
+# routes through stacked per-query tables, CER keys are prefixed with the
+# query id (reuse never crosses queries), and the leaf reduction
+# segment-sums counts per query on device. One BatchProgram — and therefore
+# one set of jitted supersteps — serves every bucket that shares a
+# signature, so recompiles are bounded by the number of distinct padded
+# shapes in the workload, not by the number of queries.
+
+
+def _canon_inverse(plan) -> dict[int, int]:
+    """Canonical vertex id (match level) -> original query vertex id."""
+    inv = {0: plan.root_vertex}
+    for op in plan.ops:
+        inv[op.level] = op.vertex
+    return inv
+
+
+def _batch_table_keys(sig) -> list[tuple[int, int]]:
+    """Canonical (src, dst) adjacency-table keys the program gathers from."""
+    keys = set()
+    for stage in sig[3]:
+        if stage[0] != "e":
+            continue
+        v, bk, wt, union_src = stage[1], stage[3], stage[4], stage[5]
+        for (_s, u) in bk:
+            keys.add((u, v))
+        for u_j in wt:
+            keys.add((v, u_j))
+        if not bk and union_src >= 0:
+            keys.add((union_src, v))
+    return sorted(keys)
+
+
+def stack_batch_inputs(sig, plans, n_queries):
+    """Stack per-query plan data into the padded device arrays a BatchProgram
+    consumes: adjacency tables (Q, 32*Wp(src), Wp(dst)), the root candidate
+    mask (Q, Wp(root)), and per-stage contained-vertex thresholds (Q,).
+    Zero-padding is inert everywhere — padded table rows/words carry no set
+    bits and padded queries (len(plans) <= n_queries) get no root candidates."""
+    widths, stages = sig[2], sig[3]
+    invs = [_canon_inverse(p) for p in plans]
+    tabs = {}
+    for (cu, cv) in _batch_table_keys(sig):
+        arr = np.zeros((n_queries, 32 * widths[cu], widths[cv]), np.uint32)
+        for qi, plan in enumerate(plans):
+            t = plan.tables[(invs[qi][cu], invs[qi][cv])]
+            arr[qi, :t.shape[0], :t.shape[1]] = t
+        tabs[f"{cu}:{cv}"] = jnp.asarray(arr)
+    mask = np.zeros((n_queries, widths[0]), np.uint32)
+    for qi, plan in enumerate(plans):
+        m = plan.masks[plan.root_vertex]
+        mask[qi, :m.shape[0]] = m
+    con = {}
+    for si, stage in enumerate(stages):
+        if stage[0] == "d":
+            continue
+        if stage[0] == "root":
+            vals = [len(p.an.con[0]) for p in plans]
+        else:
+            lvl = stage[1]
+            vals = [next(op.con_threshold for op in p.ops if op.level == lvl)
+                    for p in plans]
+        a = np.ones(n_queries, np.int32)
+        a[:len(plans)] = np.maximum(vals, 1)
+        con[str(si)] = jnp.asarray(a)
+    return {"tables": tabs, "mask_root": jnp.asarray(mask), "con": con}
+
+
+def _union_rows_batched(tables, bmcol, qid):
+    """Batched no-black-bwd union: OR of adjacency rows selected by a bitmap
+    column, with row t reading query qid[t]'s table. tables (Q, S, W) where
+    S = 32 * (bmcol words). Unlike the single-query _union_rows (a boolean
+    matmul over unpacked bits), this stays in packed uint32 — masked rows
+    OR-reduced over the source axis — because unpacking a per-row gathered
+    (T, S, 32W) bit tensor would blow up memory for wide spaces."""
+    s = tables.shape[1]
+    word = jnp.arange(s, dtype=jnp.int32) >> 5
+    bit = (jnp.arange(s, dtype=jnp.int32) & 31).astype(jnp.uint32)
+    src = ((bmcol[:, word] >> bit[None, :]) & jnp.uint32(1)) != 0    # (T, S)
+    sel = jnp.where(src[:, :, None], tables[qid], jnp.uint32(0))     # (T, S, W)
+    return jax.lax.reduce(sel, np.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+class BatchProgram:
+    """Batched (query-id lane) stage closures for one canonical plan shape
+    signature. Built from the signature alone — no per-query data — so one
+    program and its jitted supersteps serve every plan bucket sharing the
+    signature; per-query tables/masks/thresholds arrive as the stacked
+    `data` argument (stack_batch_inputs). Mirrors VectorEngine's closures
+    with three changes: every adjacency gather indexes `tables[key][qid,
+    idx]`, contained-vertex thresholds are per-row data, and the leaf
+    reduction segment-sums per query."""
+
+    def __init__(self, sig, n_queries, *, use_cv=True, use_cer=True):
+        self.sig = sig
+        _, self.t, self.widths, self._stages, self.leaf = sig
+        self.nq = n_queries
+        self.use_cv = use_cv
+        self.use_cer = use_cer
+        self._n_stages = len(self._stages)
+        self._jit: dict = {}
+        self.compiled_supersteps = 0      # fresh jit traces (bucket_recompiles)
+        self._cer_stages = [si for si, stg in enumerate(self._stages)
+                            if use_cer and stg[0] == "e" and stg[8] and stg[3]]
+
+    # ----------------------------------------------------------- static shape
+    def dedup_slots(self, si: int) -> tuple:
+        stg = self._stages[si]
+        return stg[8] if stg[0] == "e" else ()
+
+    def stage_width(self, si: int) -> int:
+        """Padded bitmap words of the stage's extension target."""
+        stg = self._stages[si]
+        return self.widths[0] if stg[0] == "root" else self.widths[stg[1]]
+
+    def _is_boundary(self, si: int) -> bool:
+        stg = self._stages[si]
+        return stg[0] in ("root", "d") or stg[2] == IDX
+
+    def _segment(self, b: int):
+        bms = []
+        si = b + 1
+        while si < self._n_stages and not self._is_boundary(si):
+            bms.append(si)
+            si += 1
+        return bms, si
+
+    def _ladder(self, b: int):
+        segs = []
+        si = b
+        while True:
+            bms, exit_si = self._segment(si)
+            segs.append((si, bms, exit_si))
+            if exit_si == self._n_stages:
+                return segs
+            si = exit_si
+
+    # ----------------------------------------------------------- raw closures
+    def _make_compute_parts(self, si: int):
+        """(compute_r(tile, data) -> (r, pop), con_key): the batched analogue
+        of VectorEngine._make_compute_parts. con_key indexes data["con"]
+        (per-query thresholds); None means no contained-vertex prune."""
+        stage = self._stages[si]
+        if stage[0] == "root":
+
+            def compute_r(tile, data):
+                r = data["mask_root"][tile["qid"]]
+                return r, bitops.row_popcount(r)
+
+            return compute_r, (str(si) if self.use_cv else None)
+        if stage[0] == "d":
+            v = stage[1]
+
+            def compute_r(tile, data):
+                r = tile["bm"][v]
+                return r, bitops.row_popcount(r)
+
+            return compute_r, None
+        v, bk, union_src, same_idx = stage[1], stage[3], stage[5], stage[6]
+
+        def compute_r(tile, data):
+            qid = tile["qid"]
+            if bk:
+                r = None
+                for (s, u) in bk:
+                    rows = data["tables"][f"{u}:{v}"][qid, tile["idx"][:, s]]
+                    r = rows if r is None else (r & rows)
+            else:
+                r = _union_rows_batched(data["tables"][f"{union_src}:{v}"],
+                                        tile["bm"][union_src], qid)
+            for s in same_idx:
+                r = bitops.clear_bit_rows(r, tile["idx"][:, s])
+            return r, bitops.row_popcount(r)
+
+        return compute_r, (str(si) if self.use_cv else None)
+
+    def _finish(self, tile, r, pop, con_key, data):
+        con = (data["con"][con_key][tile["qid"]]
+               if con_key is not None else 1)
+        ok = tile["alive"] & (pop >= con) & (pop > 0)
+        r = jnp.where(ok[:, None], r, jnp.uint32(0))
+        pop = jnp.where(ok, pop, 0)
+        return r, pop, ok
+
+    def _make_expand(self, si: int):
+        stage = self._stages[si]
+        t_out = self.t
+        if stage[0] == "d":
+            wt_prune: list[tuple[int, str]] = []
+            same_label_bm = list(stage[3])
+            drop_bm = stage[1]
+        elif stage[0] == "root":
+            wt_prune, same_label_bm, drop_bm = [], [], None
+        else:
+            v, wt = stage[1], stage[4]
+            wt_prune = [(u_j, f"{v}:{u_j}") for u_j in wt]
+            same_label_bm = list(stage[7])
+            drop_bm = None
+
+        def expand(tile, r, start, data):
+            rows, bitpos, valid, total = bitops.expand_select(r, start, t_out)
+            idx = tile["idx"][rows]
+            idx = jnp.concatenate([idx, bitpos[:, None]], axis=1)
+            qid = tile["qid"][rows]
+            bm_out = {}
+            alive = valid
+            for u, col in tile["bm"].items():
+                if u == drop_bm:
+                    continue
+                g = col[rows]
+                for (u_j, tkey) in wt_prune:
+                    if u_j == u:
+                        g = g & data["tables"][tkey][qid, bitpos]
+                if u in same_label_bm:
+                    g = bitops.clear_bit_rows(g, bitpos)
+                alive = alive & (bitops.row_popcount(g) > 0)
+                bm_out[u] = g
+            return {"idx": idx, "qid": qid, "bm": bm_out,
+                    "alive": alive}, total
+
+        return expand
+
+    def _make_leaf_terms(self):
+        singles = list(self.leaf[0])
+        groups = [list(g) for g in self.leaf[1]]
+
+        def leaf(tile):
+            terms = []
+            for u in singles:
+                terms.append(bitops.row_popcount(tile["bm"][u]))
+            for g in groups:
+                if len(g) == 2:
+                    a, b = tile["bm"][g[0]], tile["bm"][g[1]]
+                    terms += [bitops.row_popcount(a), bitops.row_popcount(b),
+                              bitops.row_popcount(a & b)]
+                else:
+                    a, b, c = (tile["bm"][g[0]], tile["bm"][g[1]],
+                               tile["bm"][g[2]])
+                    terms += [bitops.row_popcount(a), bitops.row_popcount(b),
+                              bitops.row_popcount(c),
+                              bitops.row_popcount(a & b),
+                              bitops.row_popcount(a & c),
+                              bitops.row_popcount(b & c),
+                              bitops.row_popcount(a & b & c)]
+            return (jnp.stack(terms, axis=1) if terms
+                    else jnp.zeros((tile["alive"].shape[0], 0), jnp.int32))
+
+        return leaf
+
+    # ------------------------------------------------------------- superstep
+    def superstep(self, b: int):
+        """Batched mirror of TileScheduler._superstep: one jitted
+        run-to-completion call advancing a mixed-query frontier chunk from
+        boundary `b` down to the per-query leaf reduction."""
+        key = ("ss", b)
+        if key in self._jit:
+            return self._jit[key]
+        t = self.t
+        cer_set = set(self._cer_stages)
+        segs = self._ladder(b)
+        exit_bounds = [exit_si for (_, _, exit_si) in segs[:-1]]
+        built = []
+        seg_cer: list = []
+        gather_ops = 0
+        n_computes = 0
+        for (si, bms, exit_si) in segs:
+            leaf_i = exit_si == self._n_stages
+            chain = []
+            for sj in bms + ([] if leaf_i else [exit_si]):
+                compute_r, con_key = self._make_compute_parts(sj)
+                chain.append((sj, self.dedup_slots(sj), compute_r, con_key))
+                seg_cer += [sj] if sj in cer_set else []
+                if self._stages[sj][0] == "e":
+                    gather_ops += t * max(len(self._stages[sj][3]), 1)
+                n_computes += 1
+            built.append((self._make_expand(si), chain, leaf_i))
+        leaf_terms = self._make_leaf_terms()
+        leaf_reduce = make_leaf_reduce_batched(
+            list(self.leaf[0]), [list(g) for g in self.leaf[1]], self.nq)
+        root = b == 0
+        if root:
+            root_compute_r, root_con = self._make_compute_parts(0)
+
+        def run_compute(si, dedup, compute_r, con_key, tile, bufs, acc, data):
+            if si in bufs:
+                keys = jnp.stack(
+                    [tile["qid"]] + [tile["idx"][:, s] for s in dedup], axis=1)
+                r, pop, bufs[si], s = _cer_compute(
+                    keys, lambda: compute_r(tile, data), tile, bufs[si])
+                acc = [a + v for a, v in zip(acc, s)]
+            else:
+                r, pop = compute_r(tile, data)
+            r, pop, ok = self._finish(tile, r, pop, con_key, data)
+            return r, pop, ok, acc
+
+        def step(tile, r_in, cursor, bufs, data, active):
+            bufs = dict(bufs)
+            acc = [jnp.int32(0)] * 4                 # hits/misses/seen/ins
+            if root:
+                r0, pop0 = root_compute_r(tile, data)
+                r_in, _, _ = self._finish(tile, r0, pop0, root_con, data)
+            frontiers = []
+            alive_l, total_l = [], []
+            proceed = None
+            cur_tile, cur_r, cur_cursor = tile, r_in, cursor
+            total_in = None
+            for k, (expand, chain, leaf_i) in enumerate(built):
+                cur, tot = expand(cur_tile, cur_r, cur_cursor, data)
+                # drop rows of queries that already hit their limit. Applied
+                # *after* expansion so bit ranks (and therefore host chunk
+                # cursors into this frontier) are unaffected; counts of
+                # deactivated queries freeze at >= limit and clamp.
+                cur["alive"] = cur["alive"] & active[cur["qid"]]
+                if k == 0:
+                    total_in = tot.astype(jnp.int32)
+                else:
+                    cur["alive"] = cur["alive"] & proceed
+                last = None
+                for (sj, dedup, compute_r, con_key) in chain:
+                    r, pop, ok, acc = run_compute(sj, dedup, compute_r,
+                                                  con_key, cur, bufs, acc,
+                                                  data)
+                    last = (r, pop, ok)
+                    if not leaf_i and sj == chain[-1][0]:
+                        break                        # exit compute: no store
+                    bm = dict(cur["bm"])
+                    bm[self._stages[sj][1]] = r
+                    cur = {"idx": cur["idx"], "qid": cur["qid"], "bm": bm,
+                           "alive": ok}
+                if leaf_i:
+                    terms = leaf_terms(cur)
+                    count_q, ovf_q = leaf_reduce(terms, cur["alive"],
+                                                 cur["qid"])
+                    leaf_alive = cur["alive"].sum().astype(jnp.int32)
+                    packed = jnp.stack(
+                        [total_in, leaf_alive, *alive_l, *total_l, *acc])
+                    return (cur, terms, count_q, ovf_q, packed, frontiers,
+                            bufs)
+                r2, pop2, ok2 = last
+                alive_k = ok2.sum().astype(jnp.int32)
+                total_k = jnp.sum(pop2, dtype=jnp.int32)
+                frontiers.append((cur, r2))
+                alive_l.append(alive_k)
+                total_l.append(total_k)
+                ok_here = (total_k <= t) & (alive_k > 0)
+                proceed = ok_here if proceed is None else (proceed & ok_here)
+                cur_tile, cur_r, cur_cursor = cur, r2, jnp.int32(0)
+
+        entry = (jax.jit(step), exit_bounds, sorted(set(seg_cer)),
+                 n_computes, gather_ops)
+        self._jit[key] = entry
+        self.compiled_supersteps += 1
+        return entry
+
+    def merge_fn(self, b: int):
+        """Sibling-frontier merge with the query-id lane carried through."""
+        key = ("merge", b)
+        if key in self._jit:
+            return self._jit[key]
+        t = self.t
+
+        def merge(ta, ra, tb, rb):
+            idx = jnp.concatenate([ta["idx"], tb["idx"]])
+            qid = jnp.concatenate([ta["qid"], tb["qid"]])
+            bm = {u: jnp.concatenate([ta["bm"][u], tb["bm"][u]])
+                  for u in ta["bm"]}
+            r = jnp.concatenate([ra, rb])
+            live = bitops.row_popcount(r) > 0
+            order = jnp.argsort(~live)[:t]           # stable: live first
+            tile = {"idx": idx[order], "qid": qid[order],
+                    "bm": {u: c[order] for u, c in bm.items()},
+                    "alive": live[order]}
+            return tile, r[order]
+
+        fn = jax.jit(merge)
+        self._jit[key] = fn
+        return fn
+
+
+# one BatchProgram per (signature, padded query count, traced knobs): shared
+# by every SuperbatchScheduler whose bucket matches, across Matcher sessions.
+# LRU-bounded — each program pins its jitted supersteps, and a long-running
+# server sees an open-ended stream of padded shapes.
+_PROGRAMS: "OrderedDict[tuple, BatchProgram]" = OrderedDict()
+_PROGRAMS_MAX = 32
+
+
+def _get_batch_program(sig, n_queries, *, use_cv, use_cer):
+    key = (sig, n_queries, use_cv, use_cer)
+    prog = _PROGRAMS.get(key)
+    if prog is None:
+        prog = BatchProgram(sig, n_queries, use_cv=use_cv, use_cer=use_cer)
+        _PROGRAMS[key] = prog
+        while len(_PROGRAMS) > _PROGRAMS_MAX:
+            _PROGRAMS.popitem(last=False)
+    else:
+        _PROGRAMS.move_to_end(key)
+    return prog
+
+
+class SuperbatchScheduler:
+    """Cross-query superbatch runtime: one host work loop drains interleaved
+    frontiers from every query in a shape-signature bucket through the shared
+    BatchProgram supersteps. Per-query counts come back segment-summed from
+    the leaf reduction; CER ring buffers are scheduler-lifetime and keyed by
+    (query id, read-set), so a warm scheduler (Matcher caches them per
+    bucket) reuses extensions across runs without ever crossing queries."""
+
+    def __init__(self, plans, *, tile_rows: int = 256, use_cv: bool = True,
+                 use_dedup: bool = True, use_cer_buffer: bool = True,
+                 cer_buffer_slots: int = 256, pack_tiles: bool = True):
+        from .plan import _pow2ceil, plan_shape_signature
+        if not plans:
+            raise ValueError("superbatch needs at least one plan")
+        sigs = {plan_shape_signature(p, tile_rows=tile_rows) for p in plans}
+        if len(sigs) > 1:
+            raise ValueError("superbatch plans must share one shape "
+                             f"signature, got {len(sigs)}")
+        self.sig = next(iter(sigs))
+        self.plans = list(plans)
+        self.nq = len(plans)
+        self.nq_pad = _pow2ceil(self.nq)
+        self.t = tile_rows
+        self.pack_tiles = pack_tiles
+        self.program = _get_batch_program(
+            self.sig, self.nq_pad, use_cv=use_cv,
+            use_cer=(use_dedup and use_cer_buffer))
+        self.data = stack_batch_inputs(self.sig, self.plans, self.nq_pad)
+        self._buffers = {
+            si: _init_cer_buffer(cer_buffer_slots,
+                                 1 + len(self.program.dedup_slots(si)),
+                                 self.program.stage_width(si))
+            for si in self.program._cer_stages}
+        self.stats = VectorStats()
+
+    def _push_frontier(self, b, tile, r, alive_n, total, stack, pending):
+        st = self.stats
+        if self.pack_tiles and alive_n * 2 <= self.t:
+            pend = pending.get(b)
+            if pend is None:
+                pending[b] = [tile, r, alive_n, total]
+            elif pend[2] + alive_n <= self.t:
+                mtile, mr = self.program.merge_fn(b)(pend[0], pend[1], tile, r)
+                st.device_steps += 1
+                st.packed_tiles += 1
+                pending[b] = [mtile, mr, pend[2] + alive_n, pend[3] + total]
+            else:
+                stack.append((b, pend[0], pend[1], 0))
+                pending[b] = [tile, r, alive_n, total]
+        else:
+            stack.append((b, tile, r, 0))
+
+    def run(self, *, limit: int = 1_000_000, max_steps: int | None = None):
+        """Drain every query to completion (or `limit` embeddings each /
+        `max_steps` total dispatches for the whole bucket). Returns
+        (per-query counts, VectorStats, timed_out)."""
+        prog = self.program
+        st = self.stats = VectorStats()
+        st.batched_queries = self.nq
+        compiled_before = prog.compiled_supersteps
+        t = self.t
+        counts = [0] * self.nq
+        timed_out = False
+        singles = list(prog.leaf[0])
+        groups = [list(g) for g in prog.leaf[1]]
+        # queries that reached `limit` deactivate: their frontier rows are
+        # masked dead inside subsequent supersteps (counts freeze and clamp)
+        active_np = np.zeros(self.nq_pad, bool)
+        active_np[:self.nq] = True
+        active = jnp.asarray(active_np)
+
+        root_tile = {"idx": jnp.zeros((self.nq_pad, 0), jnp.int32),
+                     "qid": jnp.arange(self.nq_pad, dtype=jnp.int32),
+                     "bm": {},
+                     "alive": jnp.arange(self.nq_pad) < self.nq}
+        root_r = jnp.zeros((self.nq_pad, prog.widths[0]), jnp.uint32)
+        stack: list = [(0, root_tile, root_r, 0)]
+        pending: dict[int, list] = {}
+
+        while stack or pending:
+            if not stack:
+                b = max(pending)                     # flush deepest first
+                tile_p, r_p, _, _ = pending.pop(b)
+                stack.append((b, tile_p, r_p, 0))
+                continue
+            if max_steps is not None and st.device_steps >= max_steps:
+                timed_out = True
+                break
+            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
+            b, tile, r, cursor = stack.pop()
+            fn, exit_bounds, seg_cer, n_computes, gather_ops = \
+                prog.superstep(b)
+            bufs = {si: self._buffers[si] for si in seg_cer}
+            with enable_x64():                       # leaf reduce is int64
+                leaf_tile, terms, cnt_q, ovf_q, packed, frontiers, bufs2 = fn(
+                    tile, r, jnp.int32(cursor), bufs, self.data, active)
+            packed_np, cnt_np, ovf_np = jax.device_get((packed, cnt_q, ovf_q))
+            for si in seg_cer:
+                self._buffers[si] = bufs2[si]
+            st.device_steps += 1
+            st.supersteps += 1
+            st.tiles += 1
+            st.expansions += 1
+            st.rows_processed += t * max(n_computes, 1)
+            st.gather_and_ops += gather_ops
+            nb = len(exit_bounds)
+            total_in = int(packed_np[0])
+            leaf_alive = int(packed_np[1])
+            alive_l = [int(v) for v in packed_np[2:2 + nb]]
+            total_l = [int(v) for v in packed_np[2 + nb:2 + 2 * nb]]
+            hits, misses, seen, uniq = (int(v)
+                                        for v in packed_np[2 + 2 * nb:])
+            st.cer_hits += hits
+            st.cer_misses += misses
+            st.dedup_keys_seen += seen
+            st.dedup_unique += uniq
+            if cursor + t < total_in:
+                stack.append((b, tile, r, cursor + t))
+            reached_leaf = True
+            for k in range(nb):
+                st.rows_alive += alive_l[k]
+                if alive_l[k] == 0:
+                    reached_leaf = False
+                    break
+                if total_l[k] <= t:
+                    continue
+                ft, fr = frontiers[k]
+                self._push_frontier(exit_bounds[k], ft, fr, alive_l[k],
+                                    total_l[k], stack, pending)
+                reached_leaf = False
+                break
+            if not reached_leaf:
+                continue
+            st.leaf_tiles += 1
+            st.rows_alive += leaf_alive
+            if bool(ovf_np.any()):
+                # exact host fallback, per query (qid selects the rows)
+                st.leaf_overflows += 1
+                terms_np = np.asarray(terms)
+                alive_np = np.asarray(leaf_tile["alive"])
+                qid_np = np.asarray(leaf_tile["qid"])
+                for qi in range(self.nq):
+                    sel = qid_np == qi
+                    counts[qi] += leaf_count_host(singles, groups,
+                                                  terms_np[sel],
+                                                  alive_np[sel])
+            else:
+                for qi in range(self.nq):
+                    counts[qi] += int(cnt_np[qi])
+            if all(c >= limit for c in counts):
+                break
+            done = [qi for qi in range(self.nq)
+                    if active_np[qi] and counts[qi] >= limit]
+            if done:
+                active_np[done] = False
+                active = jnp.asarray(active_np)
+
+        st.bucket_recompiles = prog.compiled_supersteps - compiled_before
+        return [min(c, limit) for c in counts], st, timed_out

@@ -24,7 +24,7 @@ import os
 import time
 from collections import deque
 
-from repro.api import Dataset, Matcher, MatchOptions
+from repro.api import BATCH_MODES, Dataset, Matcher, MatchOptions
 from repro.core.graph import Graph
 
 __all__ = ["QueryItem", "MatchQueueRuntime"]
@@ -74,54 +74,140 @@ class MatchQueueRuntime:
                                           query=q, limit=limit,
                                           max_steps=max_steps))
 
-    # --------------------------------------------------------------- executor
-    def _execute(self, item: QueryItem, fail_hook=None) -> QueryItem:
-        t0 = time.perf_counter()
-        # compile first: a plan survives executor death (it lives in the
-        # shared Matcher), so a re-issued attempt starts from the cache.
-        # cache_hits counts attempts whose plan was already compiled
-        # (re-issues and duplicate workload queries).
-        hits_before = self.matcher.cache_info().hits
-        self.matcher.compile(item.query)
-        self.stats["cache_hits"] += (self.matcher.cache_info().hits
-                                     - hits_before)
-        if fail_hook is not None:
-            fail_hook(item)     # test hook: may raise (simulated node death)
-        out = self.matcher.count(item.query, limit=item.limit,
-                                 budget=item.max_steps)
-        item.count = out.count
-        item.elapsed_s = time.perf_counter() - t0
-        item.done = True
-        return item
-
     # -------------------------------------------------------------- scheduler
-    def run(self, *, fail_hook=None, checkpoint_every: int = 0) -> dict:
+    def run(self, *, fail_hook=None, checkpoint_every: int = 0,
+            batch: str = "auto") -> dict:
         """Drain the queue. `fail_hook(item)` may raise to simulate executor
-        loss; the item is re-queued up to max_attempts (idempotent)."""
+        loss; the item is re-queued up to max_attempts (idempotent).
+
+        With `batch="auto"` (default) pending items drain in superbatch
+        chunks through `Matcher.match_many`: one chunk per checkpoint window
+        (the whole queue when checkpointing is off), so a single shared
+        device dispatch can advance every same-shape query in the chunk.
+        A chunk whose shared execution raises falls back to per-item
+        execution, so one poison query burns only its own retry attempts.
+        Batched `elapsed_s` is the chunk wall time amortized per item
+        (per-query latency does not exist inside a shared dispatch), so
+        deadline/straggler flagging is chunk-granular there; `batch="off"`
+        keeps the per-item executor loop with true per-item timing. Items
+        already completed (e.g. seeded by `restore()`) are skipped, so a
+        checkpoint taken mid-drain never recounts finished queries."""
+        if batch not in BATCH_MODES:
+            raise ValueError(f"batch must be one of {BATCH_MODES}, "
+                             f"got {batch!r}")
         processed = 0
         while self.pending:
-            item = self.pending.popleft()
-            item.attempts += 1
-            try:
-                item = self._execute(item, fail_hook=fail_hook)
-                if item.elapsed_s > self.deadline_s:
+            chunk: list[QueryItem] = []
+            window = checkpoint_every or len(self.pending)
+            while self.pending and len(chunk) < window:
+                item = self.pending.popleft()
+                done = self.results.get(item.query_id)
+                if done is not None and done.done and done.count is not None:
+                    continue                       # restored: already counted
+                item.attempts += 1
+                # compile before the failure point: the plan lives in the
+                # shared Matcher, so a re-issued attempt starts from the
+                # cache. cache_hits counts attempts whose plan was already
+                # compiled (re-issues and duplicate workload queries). A
+                # compile-phase fault consumes this attempt and re-issues,
+                # like any other executor death.
+                hits_before = self.matcher.cache_info().hits
+                try:
+                    self.matcher.compile(item.query)
+                except Exception:     # noqa: BLE001
+                    self._requeue(item)
+                    processed += 1
+                    continue
+                self.stats["cache_hits"] += (self.matcher.cache_info().hits
+                                             - hits_before)
+                if fail_hook is not None:
+                    try:
+                        fail_hook(item)   # test hook: simulated node death
+                    except Exception:     # noqa: BLE001
+                        self._requeue(item)
+                        processed += 1
+                        continue
+                chunk.append(item)
+            if not chunk:
+                continue
+            for it, out, dt in self._exec_chunk(chunk, batch):
+                if out is None:      # executor died on this item: re-issue
+                    self._requeue(it)
+                    continue
+                it.count = out.count
+                it.elapsed_s = dt
+                it.done = True
+                if it.elapsed_s > self.deadline_s:
                     # straggler: result kept (first-result-wins), flagged
                     self.stats["reissued"] += 1
-                self.results[item.query_id] = item
+                self.results[it.query_id] = it
                 self.stats["completed"] += 1
-            except Exception:    # noqa: BLE001 — executor died mid-item
-                if item.attempts < self.max_attempts:
-                    self.pending.append(item)      # re-issue (idempotent)
-                    self.stats["reissued"] += 1
-                else:
-                    item.done = True
-                    item.count = None
-                    self.results[item.query_id] = item
-                    self.stats["failed"] += 1
-            processed += 1
-            if checkpoint_every and processed % checkpoint_every == 0:
+            processed += len(chunk)
+            if checkpoint_every and processed >= checkpoint_every:
+                processed = 0
                 self.checkpoint()
         return {i: r.count for i, r in sorted(self.results.items())}
+
+    def _exec_chunk(self, chunk: list[QueryItem], batch: str):
+        """Execute one drained chunk; returns [(item, outcome | None,
+        elapsed_s)].
+
+        The superbatched path groups items by (limit, max_steps) — submit()
+        normally makes these uniform — and amortizes each group's wall time
+        per item. A group falls back to individual execution (its own
+        budget, its own timing) when its shared execution raises — a poison
+        query fails alone instead of burning the whole chunk's retry
+        attempts, and successfully-batched groups keep their results — or
+        when the bucket's *pooled* step budget capped: per-item budgets are
+        a per-query contract, so a runaway query must not silently truncate
+        its siblings' counts."""
+        done: dict[int, tuple] = {}            # chunk idx -> (outcome, dt)
+        if batch == "auto" and len(chunk) > 1:
+            groups: dict[tuple, list[int]] = {}
+            for k, it in enumerate(chunk):
+                groups.setdefault((it.limit, it.max_steps), []).append(k)
+            for (limit, max_steps), ks in groups.items():
+                t0 = time.perf_counter()
+                try:
+                    outs = self.matcher.match_many(
+                        [chunk[k].query for k in ks], limit=limit,
+                        budget=max_steps, batch="auto")
+                except Exception:    # noqa: BLE001 — isolate per item below
+                    continue
+                per = (time.perf_counter() - t0) / len(ks)
+                for k, out in zip(ks, outs):
+                    # a capped *bucket* (batched_queries > 0) pooled its
+                    # members' budgets, so those counts may be truncated —
+                    # redo them under their own per-item budget. Sequential
+                    # fallbacks already honored the per-item contract, so
+                    # their outcomes (timed out or not) are kept.
+                    if (out.timed_out
+                            and getattr(out.stats, "batched_queries", 0)):
+                        continue
+                    done[k] = (out, per)
+        results = []
+        for k, it in enumerate(chunk):
+            if k in done:
+                results.append((it, *done[k]))
+                continue
+            t0 = time.perf_counter()
+            try:
+                out = self.matcher.count(it.query, limit=it.limit,
+                                         budget=it.max_steps)
+                results.append((it, out, time.perf_counter() - t0))
+            except Exception:    # noqa: BLE001 — executor died mid-item
+                results.append((it, None, 0.0))
+        return results
+
+    def _requeue(self, item: QueryItem) -> None:
+        if item.attempts < self.max_attempts:
+            self.pending.append(item)              # re-issue (idempotent)
+            self.stats["reissued"] += 1
+        else:
+            item.done = True
+            item.count = None
+            self.results[item.query_id] = item
+            self.stats["failed"] += 1
 
     # ------------------------------------------------------------- checkpoint
     def checkpoint(self) -> None:
@@ -138,7 +224,26 @@ class MatchQueueRuntime:
         self.stats["checkpoints"] += 1
 
     def restore(self) -> dict | None:
+        """Load the last checkpoint and apply it: submitted items whose
+        query_id the checkpoint records as completed are pulled out of
+        `pending` and their counts seeded into `results`, so a
+        subsequent `run()` (batched or not) never recounts them. Call after
+        re-`submit()`ing the same workload. Returns the raw checkpoint state
+        (or None when there is no checkpoint)."""
         if not self.state_path or not os.path.exists(self.state_path):
             return None
         with open(self.state_path) as f:
-            return json.load(f)
+            state = json.load(f)
+        completed = {int(i): c for i, c in state.get("results", {}).items()
+                     if c is not None}
+        if completed:
+            still_pending = deque()
+            for item in self.pending:
+                if item.query_id in completed:
+                    item.count = completed[item.query_id]
+                    item.done = True
+                    self.results[item.query_id] = item
+                else:
+                    still_pending.append(item)
+            self.pending = still_pending
+        return state

@@ -1,0 +1,13 @@
+"""Suite-wide pytest config: tier markers.
+
+Every test is `tier1` (fast, deterministic — run by `make verify` / CI's
+blocking job) unless explicitly marked `tier2` (hypothesis-heavy /
+long-running — run as a separate non-blocking CI job). The auto-marking
+keeps `-m tier1` and `-m "not tier2"` equivalent."""
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.get_closest_marker("tier2") is None:
+            item.add_marker(pytest.mark.tier1)

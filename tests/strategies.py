@@ -1,0 +1,176 @@
+"""Shared graph/workload generators for the test suite.
+
+Every random-graph generator used by the tests lives here — deterministic
+builders (seeded numpy) and hypothesis composites (guarded import, so hosts
+without hypothesis still run the deterministic tests). Test files must not
+define their own generators; import from this module instead.
+
+Deterministic:
+  fig1_pair()          — the paper's Figure-1 data/query graphs
+  random_pair(seed)    — seeded random (query, data); directed / edge-labeled
+                         / self-loop regimes via kwargs
+  brother_workload()   — hub graph + path query engineered for CER brother
+                         classes
+  batch_workload(seed) — one data graph + a multi-query workload with
+                         structural repetition (superbatch bucketing tests)
+
+Hypothesis (available when `HAS_HYPOTHESIS`):
+  small_graph_pair()   — small random labeled (query, data) pairs
+  graph_regime()       — (seed, directed, n_edge_labels, qsize) regimes
+  workload_regime()    — (seed, n_queries, dup, qsize, tile_rows, slots)
+                         regimes for batched-vs-sequential differentials
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import (build_graph, random_walk_query,
+                              synthetic_labeled_graph)
+
+try:
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                        # pragma: no cover
+    st = None
+    HAS_HYPOTHESIS = False
+
+__all__ = ["fig1_pair", "random_pair", "brother_workload", "batch_workload",
+           "HAS_HYPOTHESIS", "small_graph_pair", "graph_regime",
+           "workload_regime"]
+
+
+# ------------------------------------------------------------- deterministic
+
+def fig1_pair():
+    """The paper's Figure-1 data/query graphs."""
+    data = build_graph(
+        12,
+        [(0, 1), (0, 2), (0, 3), (0, 7), (0, 8), (1, 2), (1, 3), (1, 7),
+         (1, 8), (2, 4), (2, 5), (2, 6), (3, 6), (4, 9), (5, 10), (5, 9),
+         (6, 10), (8, 10), (8, 11), (9, 11), (10, 11), (7, 2), (8, 3)],
+        [0, 1, 2, 2, 3, 3, 3, 4, 4, 0, 0, 1])
+    query = build_graph(
+        7, [(0, 1), (0, 2), (0, 4), (1, 2), (1, 4), (2, 3), (3, 5), (4, 5),
+            (4, 6), (5, 6)],
+        [0, 1, 2, 3, 4, 0, 1])
+    return data, query
+
+
+def random_pair(seed, *, directed=False, n_edge_labels=None, qsize=4,
+                self_loops=True):
+    """Seeded random (query, data) pair; query is None when the random walk
+    cannot reach qsize vertices. Self-loop edges are kept by default (the
+    uniform pair draw produces them; they exercise the CSR builder's dedup
+    and the engines' injectivity handling); pass self_loops=False for a
+    loop-free regime."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(12, 36))
+    n_labels = int(rng.integers(1, 4))
+    m = int(rng.integers(n, 3 * n))
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    if not self_loops:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+    labels = rng.integers(0, n_labels, size=n)
+    elab = (rng.integers(0, n_edge_labels, size=src.shape[0])
+            if n_edge_labels is not None else None)
+    data = build_graph(n, np.stack([src, dst], 1), labels, directed=directed,
+                       edge_labels=elab, n_labels=n_labels)
+    try:
+        query = random_walk_query(data, qsize, seed=seed ^ 0x5A5A5A)
+    except RuntimeError:
+        return None, data
+    return query, data
+
+
+def brother_workload():
+    """Bipartite-ish data + path query engineered so many partial embeddings
+    share the same extension read-set (brother embeddings): nB hubs (label 1)
+    each adjacent to ALL nA label-0 vertices and to a private block of nC
+    label-2 vertices. Extending the C vertex is keyed only on the hub column,
+    so (a, b) rows collapse into nB classes."""
+    nA, nB, nC = 12, 3, 4
+    b0, c0 = nA, nA + nB
+    labels = [0] * nA + [1] * nB + [2] * (nB * nC)
+    edges = []
+    for b in range(nB):
+        edges += [(b0 + b, a) for a in range(nA)]
+        edges += [(b0 + b, c0 + b * nC + c) for c in range(nC)]
+    data = build_graph(len(labels), edges, labels)
+    query = build_graph(3, [(0, 1), (1, 2)], [0, 1, 2])
+    return query, data
+
+
+def batch_workload(seed=0, *, n=300, deg=6.0, n_labels=3, n_queries=8,
+                   dup=2, qsizes=(4, 5, 6), power_law=True, directed=False,
+                   n_edge_labels=None):
+    """One data graph plus a multi-query workload with structural repetition
+    (each distinct query appears `dup` times), the shape a superbatch
+    scheduler is built for. Directed / edge-labeled regimes (which resolve
+    to the ref engine under engine="auto") via kwargs. Returns
+    (data, queries)."""
+    data = synthetic_labeled_graph(n, deg, n_labels, seed=seed,
+                                   power_law=power_law, directed=directed,
+                                   n_edge_labels=n_edge_labels)
+    distinct = []
+    s = 0
+    while len(distinct) < n_queries and s < 8 * n_queries:
+        try:
+            distinct.append(random_walk_query(
+                data, qsizes[s % len(qsizes)], seed=seed * 1000 + s))
+        except RuntimeError:
+            pass
+        s += 1
+    queries = [q for q in distinct for _ in range(dup)]
+    return data, queries
+
+
+# ------------------------------------------------------------- hypothesis
+if HAS_HYPOTHESIS:
+    @st.composite
+    def small_graph_pair(draw):
+        """Small random labeled (query, data) pair; query may be None."""
+        n = draw(st.integers(12, 28))
+        n_labels = draw(st.integers(1, 3))
+        density = draw(st.floats(0.1, 0.35))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        m = max(n, int(density * n * (n - 1) / 2))
+        src = rng.integers(0, n, size=m)
+        dst = rng.integers(0, n, size=m)
+        labels = rng.integers(0, n_labels, size=n)
+        data = build_graph(n, np.stack([src, dst], 1), labels,
+                          n_labels=n_labels)
+        qsize = draw(st.integers(3, 5))
+        try:
+            query = random_walk_query(data, qsize, seed=seed ^ 0xABCDEF)
+        except RuntimeError:
+            query = None
+        return query, data
+
+    @st.composite
+    def graph_regime(draw):
+        """(seed, directed, n_edge_labels, qsize) for random_pair()."""
+        seed = draw(st.integers(0, 2**31 - 1))
+        directed = draw(st.booleans())
+        n_el = draw(st.sampled_from([None, 2, 3]))
+        qsize = draw(st.integers(3, 5))
+        return seed, directed, n_el, qsize
+
+    @st.composite
+    def workload_regime(draw):
+        """Knobs for a batched-vs-sequential differential run."""
+        seed = draw(st.integers(0, 2**15 - 1))
+        n_queries = draw(st.integers(2, 5))
+        dup = draw(st.integers(1, 3))
+        tile_rows = draw(st.sampled_from([8, 32, 128]))
+        use_cer_buffer = draw(st.booleans())
+        cer_buffer_slots = draw(st.sampled_from([2, 256]))
+        return (seed, n_queries, dup, tile_rows, use_cer_buffer,
+                cer_buffer_slots)
+else:                                                      # pragma: no cover
+    def _needs_hypothesis(*_a, **_kw):
+        raise RuntimeError("hypothesis is not installed")
+
+    small_graph_pair = graph_regime = workload_regime = _needs_hypothesis

@@ -1,29 +1,14 @@
 """Tests for the repro.api session layer (Dataset / MatchOptions / Matcher):
 engine agreement through the facade, plan-cache behavior, options validation,
 streaming, queue integration, and deprecation shims."""
-import numpy as np
 import pytest
+from strategies import fig1_pair
 
 import repro.core as core
 from repro.api import (AUTO_VECTOR_MIN_ROWS, Dataset, MatchOptions, Matcher,
                        graph_signature)
 from repro.core import build_graph, random_walk_query, synthetic_labeled_graph
 from repro.core.ref_engine import cemr_match
-
-
-def fig1_pair():
-    """The paper's Figure-1 data/query graphs."""
-    data = build_graph(
-        12,
-        [(0, 1), (0, 2), (0, 3), (0, 7), (0, 8), (1, 2), (1, 3), (1, 7),
-         (1, 8), (2, 4), (2, 5), (2, 6), (3, 6), (4, 9), (5, 10), (5, 9),
-         (6, 10), (8, 10), (8, 11), (9, 11), (10, 11), (7, 2), (8, 3)],
-        [0, 1, 2, 2, 3, 3, 3, 4, 4, 0, 0, 1])
-    query = build_graph(
-        7, [(0, 1), (0, 2), (0, 4), (1, 2), (1, 4), (2, 3), (3, 5), (4, 5),
-            (4, 6), (5, 6)],
-        [0, 1, 2, 3, 4, 0, 1])
-    return data, query
 
 
 # --------------------------------------------------------- engine agreement

@@ -1,0 +1,250 @@
+"""Differential tests for the cross-query superbatch path: batched
+`match_many` must return per-query counts identical to the sequential path
+and to the ref engine — with the CER buffer on and off, with ring capacities
+small enough to force wraparound, across encodings (union/decompose stages
+included), and through the queue runtime. Plus the checkpoint/restore
+regression: a restore never recounts completed queries."""
+import pytest
+from strategies import HAS_HYPOTHESIS, batch_workload, fig1_pair
+
+from repro.api import Dataset, Matcher, MatchOptions
+from repro.core.graph import random_walk_query, synthetic_labeled_graph
+from repro.runtime.queue import MatchQueueRuntime
+
+
+def _counts(outs):
+    return [o.count for o in outs]
+
+
+def _assert_batch_matches_sequential(data, queries, opts, *, expect_ref=True):
+    m = Matcher(Dataset.from_graph(data))
+    seq = m.match_many(queries, opts, batch="off")
+    bat = m.match_many(queries, opts, batch="auto")
+    assert _counts(seq) == _counts(bat)
+    if expect_ref:
+        ref = [m.count(q, opts, engine="ref").count for q in queries]
+        assert ref == _counts(bat)
+    return seq, bat
+
+
+# ------------------------------------------------------- deterministic parity
+
+@pytest.mark.parametrize("encoding,tile_rows,cer,slots", [
+    ("cost", 32, True, 256),
+    ("cost", 16, True, 2),          # ring wraparound
+    ("all_black", 16, True, 4),
+    ("case12", 32, False, 256),     # CER buffer off
+])
+def test_batched_counts_match_sequential_and_ref(encoding, tile_rows, cer,
+                                                 slots):
+    data, queries = batch_workload(seed=1, n=220, n_queries=4, dup=2)
+    assert len(queries) >= 6
+    opts = MatchOptions(engine="vector", tile_rows=tile_rows, limit=10**9,
+                        encoding=encoding, use_cer_buffer=cer,
+                        cer_buffer_slots=slots)
+    seq, bat = _assert_batch_matches_sequential(data, queries, opts)
+    # duplicate queries bucket together: at least one real superbatch ran,
+    # and its shared stats carry the query-id-lane accounting
+    stats = {id(o.stats): o.stats for o in bat}.values()
+    assert any(s.batched_queries >= 2 for s in stats)
+    assert all(s.leaf_tiles > 0 for s in stats if s.batched_queries)
+
+
+def test_batched_union_and_decompose_stages():
+    """all_white forces BM aggregation: the workload below compiles plans
+    with decompose boundaries and (for this seed) a no-black-bwd union
+    stage, exercising _union_rows_batched."""
+    data = synthetic_labeled_graph(180, 7.0, 2, seed=3)
+    q = random_walk_query(data, 6, seed=301)
+    opts = MatchOptions(engine="vector", tile_rows=32, limit=10**9,
+                        encoding="all_white")
+    _assert_batch_matches_sequential(data, [q, q], opts)
+
+
+def test_batched_leaf_overflow_falls_back_exact(monkeypatch):
+    """A tripped per-query overflow flag must recount that tile on the host
+    (exact big-int), per query, with identical results."""
+    import repro.core.scheduler as sched
+    data = synthetic_labeled_graph(60, 5.0, 3, seed=2, power_law=False)
+    q = random_walk_query(data, 5, seed=12)
+    opts = MatchOptions(engine="vector", tile_rows=64, limit=10**9)
+    m = Matcher(Dataset.from_graph(data))
+    base = _counts(m.match_many([q, q], opts, batch="auto"))
+    monkeypatch.setattr(sched, "OVERFLOW_LIMIT", 0.5)
+    # programs cache their jitted supersteps (the bound is baked in at
+    # trace time); clear so the patched bound takes effect
+    sched._PROGRAMS.clear()
+    forced = Matcher(Dataset.from_graph(data)).match_many([q, q], opts,
+                                                          batch="auto")
+    sched._PROGRAMS.clear()                   # drop the patched programs
+    assert _counts(forced) == base
+    assert forced[0].stats.leaf_overflows > 0
+
+
+def test_batched_per_query_limit_clamps_identically():
+    data, queries = batch_workload(seed=2, n=260, n_queries=3, dup=2)
+    opts = MatchOptions(engine="vector", tile_rows=32, limit=50)
+    m = Matcher(Dataset.from_graph(data))
+    seq = m.match_many(queries, opts, batch="off")
+    bat = m.match_many(queries, opts, batch="auto")
+    assert _counts(seq) == _counts(bat)
+    assert all(o.count <= 50 for o in bat)
+
+
+@pytest.mark.parametrize("directed,n_el", [(True, None), (False, 3),
+                                           (True, 3)])
+def test_batched_auto_falls_back_for_ref_engine_data(directed, n_el):
+    """Directed / edge-labeled data resolves to the ref engine under
+    engine="auto"; batched match_many must route those queries through the
+    sequential path with identical outcomes."""
+    data, queries = batch_workload(seed=7, n=40, deg=4.0, n_queries=3,
+                                   dup=1, qsizes=(4,), power_law=False,
+                                   directed=directed, n_edge_labels=n_el)
+    if len(queries) < 2:
+        pytest.skip("random walk found too few queries")
+    opts = MatchOptions(engine="auto", limit=10**9)
+    m = Matcher(Dataset.from_graph(data))
+    seq = m.match_many(queries, opts, batch="off")
+    bat = m.match_many(queries, opts, batch="auto")
+    assert _counts(seq) == _counts(bat)
+    assert all(o.engine == "ref" for o in bat)
+
+
+def test_batch_mode_validation():
+    data, query = fig1_pair()
+    m = Matcher(Dataset.from_graph(data))
+    with pytest.raises(ValueError, match="batch"):
+        m.match_many([query, query], batch="always")
+
+
+# ------------------------------------------------------------------- queue
+
+def test_queue_batched_drain_matches_sequential():
+    data, queries = batch_workload(seed=3, n=200, n_queries=3, dup=2,
+                                   power_law=False)
+    expected = None
+    for mode in ("off", "auto"):
+        rt = MatchQueueRuntime(data, tile_rows=64)
+        rt.submit(queries, limit=10**9)
+        results = rt.run(batch=mode)
+        assert rt.stats["completed"] == len(queries)
+        if expected is None:
+            expected = results
+        else:
+            assert results == expected
+
+
+def test_queue_poison_query_fails_alone():
+    """A chunk whose shared execution raises must fall back to per-item
+    execution: the poison query burns its own attempts and fails; every
+    other item in the chunk completes."""
+    data, queries = batch_workload(seed=5, n=150, n_queries=3, dup=1,
+                                   power_law=False)
+    queries = queries[:3]
+    assert len(queries) == 3
+    rt = MatchQueueRuntime(data, tile_rows=64, max_attempts=2)
+    rt.submit(queries, limit=10**9)
+    inner, poison = rt.matcher, queries[1]
+
+    class _PoisonMatcher:
+        def __getattr__(self, name):
+            return getattr(inner, name)
+
+        def match_many(self, qs, *a, **kw):
+            raise RuntimeError("simulated chunk death")
+
+        def count(self, q, *a, **kw):
+            if q is poison:
+                raise RuntimeError("poison query")
+            return inner.count(q, *a, **kw)
+
+    rt.matcher = _PoisonMatcher()
+    results = rt.run()
+    assert rt.stats["completed"] == 2 and rt.stats["failed"] == 1
+    assert results[1] is None
+    assert results[0] is not None and results[2] is not None
+
+
+def test_queue_restore_skips_completed(tmp_path):
+    """Regression: restore() after a mid-superbatch checkpoint must seed the
+    completed counts and never re-execute those queries."""
+    data, queries = batch_workload(seed=4, n=180, n_queries=4, dup=1,
+                                   power_law=False)
+    queries = queries[:4]
+    assert len(queries) == 4
+    path = str(tmp_path / "queue.json")
+
+    calls = {"n": 0}
+
+    def die_after_first_chunk(item):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise KeyboardInterrupt    # hard executor loss, not re-queued
+
+    rt = MatchQueueRuntime(data, tile_rows=64, state_path=path)
+    rt.submit(queries, limit=10**9)
+    with pytest.raises(KeyboardInterrupt):
+        rt.run(fail_hook=die_after_first_chunk, checkpoint_every=2)
+    assert rt.stats["checkpoints"] == 1    # the mid-drain checkpoint
+
+    rt2 = MatchQueueRuntime(data, tile_rows=64, state_path=path)
+    rt2.submit(queries, limit=10**9)
+    state = rt2.restore()
+    assert state is not None and len(state["results"]) == 2
+
+    executed = []
+    rt2.matcher = _CountingMatcher(rt2.matcher, queries, executed)
+    results = rt2.run()
+    # only the two unfinished queries were executed after restore
+    assert sorted(executed) == [2, 3]
+    assert rt2.stats["completed"] == 2     # restored items are not recounted
+    fresh = MatchQueueRuntime(data, tile_rows=64)
+    fresh.submit(queries, limit=10**9)
+    assert results == fresh.run()
+
+
+class _CountingMatcher:
+    """Proxy recording which submitted queries actually execute."""
+
+    def __init__(self, inner, queries, executed):
+        self._inner = inner
+        self._queries = queries
+        self._executed = executed
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def match_many(self, queries, *a, **kw):
+        self._executed.extend(self._qid(q) for q in queries)
+        return self._inner.match_many(queries, *a, **kw)
+
+    def count(self, query, *a, **kw):
+        self._executed.append(self._qid(query))
+        return self._inner.count(query, *a, **kw)
+
+    def _qid(self, query):
+        return next(i for i, q in enumerate(self._queries) if q is query)
+
+
+# ---------------------------------------------------------------- hypothesis
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings
+    from strategies import workload_regime
+
+    @pytest.mark.tier2
+    @settings(max_examples=12, deadline=None)
+    @given(workload_regime())
+    def test_batched_parity_property(regime):
+        seed, n_queries, dup, tile_rows, cer, slots = regime
+        data, queries = batch_workload(seed=seed, n=160,
+                                       n_queries=n_queries, dup=dup,
+                                       power_law=False)
+        if len(queries) < 2:
+            return
+        opts = MatchOptions(engine="vector", tile_rows=tile_rows,
+                            limit=10**9, use_cer_buffer=cer,
+                            cer_buffer_slots=slots)
+        m = Matcher(Dataset.from_graph(data))
+        seq = m.match_many(queries, opts, batch="off")
+        bat = m.match_many(queries, opts, batch="auto")
+        assert _counts(seq) == _counts(bat)

@@ -1,35 +1,21 @@
-"""Property-based tests (hypothesis) for the CEMR core invariants."""
+"""Property-based tests (hypothesis) for the CEMR core invariants.
+
+Graph strategies live in tests/strategies.py (shared across the suite);
+only the non-graph label-set strategy for the injective-count oracle is
+defined here. The whole module is tier2 (hypothesis-heavy)."""
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
+from strategies import small_graph_pair  # noqa: E402
 
-from repro.core import build_graph, cemr_match, synthetic_labeled_graph, random_walk_query
+from repro.core import cemr_match
 from repro.core.count import injective_count, _partitions
 from repro.core.filtering import build_candidate_space, pack_bitmap_adjacency
 from repro.core.oracle import nx_count
 
-
-# ---------------------------------------------------------------- strategies
-@st.composite
-def small_graph_pair(draw):
-    n = draw(st.integers(12, 28))
-    n_labels = draw(st.integers(1, 3))
-    density = draw(st.floats(0.1, 0.35))
-    seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
-    m = max(n, int(density * n * (n - 1) / 2))
-    src = rng.integers(0, n, size=m)
-    dst = rng.integers(0, n, size=m)
-    labels = rng.integers(0, n_labels, size=n)
-    data = build_graph(n, np.stack([src, dst], 1), labels, n_labels=n_labels)
-    qsize = draw(st.integers(3, 5))
-    try:
-        query = random_walk_query(data, qsize, seed=seed ^ 0xABCDEF)
-    except RuntimeError:
-        query = None
-    return query, data
+pytestmark = pytest.mark.tier2
 
 
 @settings(max_examples=25, deadline=None)

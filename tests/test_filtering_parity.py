@@ -4,32 +4,13 @@ bit-identical output to the retained per-candidate reference implementation
 match counts — on undirected, directed, and edge-labeled graphs."""
 import numpy as np
 import pytest
+from strategies import random_pair
 
 from repro.core.encoding import analyze, choose_encoding
 from repro.core.filtering import build_candidate_space
 from repro.core.filtering_ref import build_candidate_space_reference
-from repro.core.graph import build_graph, random_walk_query
 from repro.core.ordering import cemr_order
 from repro.core.ref_engine import cemr_match
-
-
-def random_pair(seed, *, directed=False, n_edge_labels=None, qsize=4):
-    rng = np.random.default_rng(seed)
-    n = int(rng.integers(12, 36))
-    n_labels = int(rng.integers(1, 4))
-    m = int(rng.integers(n, 3 * n))
-    src = rng.integers(0, n, size=m)
-    dst = rng.integers(0, n, size=m)
-    labels = rng.integers(0, n_labels, size=n)
-    elab = (rng.integers(0, n_edge_labels, size=m)
-            if n_edge_labels is not None else None)
-    data = build_graph(n, np.stack([src, dst], 1), labels, directed=directed,
-                       edge_labels=elab, n_labels=n_labels)
-    try:
-        query = random_walk_query(data, qsize, seed=seed ^ 0x5A5A5A)
-    except RuntimeError:
-        return None, data
-    return query, data
 
 
 def count_with(cs):
@@ -84,19 +65,14 @@ def test_parity_low_refine_rounds():
 # Guarded import (not module-level importorskip) so the deterministic parity
 # tests above still run on hosts without hypothesis.
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings
 except ImportError:                                        # pragma: no cover
-    st = None
+    given = None
 
-if st is not None:
-    @st.composite
-    def graph_regime(draw):
-        seed = draw(st.integers(0, 2**31 - 1))
-        directed = draw(st.booleans())
-        n_el = draw(st.sampled_from([None, 2, 3]))
-        qsize = draw(st.integers(3, 5))
-        return seed, directed, n_el, qsize
+if given is not None:
+    from strategies import graph_regime
 
+    @pytest.mark.tier2
     @settings(max_examples=30, deadline=None)
     @given(graph_regime())
     def test_parity_property(regime):

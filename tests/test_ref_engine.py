@@ -2,6 +2,7 @@
 across encodings and feature flags — the core reproduction gate."""
 import numpy as np
 import pytest
+from strategies import fig1_pair
 
 from repro.core import (build_graph, cemr_match, random_walk_query,
                         synthetic_labeled_graph)
@@ -11,21 +12,9 @@ ENCODINGS = ["cost", "all_black", "all_white", "case12"]
 
 
 def fig1_graphs():
-    """The paper's running example (Figure 1)."""
-    data = build_graph(
-        12,
-        [(0, 1), (0, 2), (0, 3), (0, 7), (0, 8), (1, 2), (1, 3), (1, 7),
-         (1, 8), (2, 4), (2, 5), (2, 6), (3, 6), (4, 9), (5, 10), (5, 9),
-         (6, 10), (8, 10), (8, 11), (9, 11), (10, 11), (7, 2), (8, 3)],
-        # labels: A=0 B=1 C=2 D=3 E=4
-        [0, 1, 2, 2, 3, 3, 3, 4, 4, 0, 0, 1],
-    )
-    query = build_graph(
-        7,
-        [(0, 1), (0, 2), (0, 4), (1, 2), (1, 4), (2, 3), (3, 5), (4, 5),
-         (4, 6), (5, 6)],
-        [0, 1, 2, 3, 4, 0, 1],
-    )
+    """The paper's running example (Figure 1) — shared fixture, in this
+    module's historical (query, data) order."""
+    data, query = fig1_pair()
     return query, data
 
 

@@ -5,31 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.experimental import enable_x64
+from strategies import brother_workload
 
 from repro.core.engine import VectorEngine, vector_match
-from repro.core.graph import (build_graph, random_walk_query,
-                              synthetic_labeled_graph)
+from repro.core.graph import random_walk_query, synthetic_labeled_graph
 from repro.core.oracle import nx_count
 from repro.core.ref_engine import preprocess
 from repro.core.scheduler import leaf_count_host, make_leaf_reduce
-
-
-def brother_workload():
-    """Bipartite-ish data + path query engineered so many partial embeddings
-    share the same extension read-set (brother embeddings): nB hubs (label 1)
-    each adjacent to ALL nA label-0 vertices and to a private block of nC
-    label-2 vertices. Extending the C vertex is keyed only on the hub column,
-    so (a, b) rows collapse into nB classes."""
-    nA, nB, nC = 12, 3, 4
-    b0, c0 = nA, nA + nB
-    labels = [0] * nA + [1] * nB + [2] * (nB * nC)
-    edges = []
-    for b in range(nB):
-        edges += [(b0 + b, a) for a in range(nA)]
-        edges += [(b0 + b, c0 + b * nC + c) for c in range(nC)]
-    data = build_graph(len(labels), edges, labels)
-    query = build_graph(3, [(0, 1), (1, 2)], [0, 1, 2])
-    return query, data
 
 
 # ------------------------------------------------------------ step accounting
