@@ -1,5 +1,6 @@
 .PHONY: verify test test-tier2 bench bench-baseline perf-smoke compile-bench \
-	compile-smoke batch-bench batch-smoke
+	compile-smoke batch-bench batch-smoke shard-test shard-bench \
+	shard-smoke docs-check
 
 verify:
 	bash scripts/ci.sh
@@ -14,11 +15,12 @@ bench:
 	PYTHONPATH=src python -m benchmarks.run --json BENCH_engine.json
 
 # regenerate the committed perf-smoke baselines (fig7 + scheduler + compile
-# + batch)
+# + batch + shard)
 bench-baseline:
 	PYTHONPATH=src python -m benchmarks.run --only fig7,sched --json benchmarks/BENCH_engine.json
 	PYTHONPATH=src python -m benchmarks.compile_bench --json benchmarks/BENCH_compile.json
 	PYTHONPATH=src python -m benchmarks.batch_bench --json benchmarks/BENCH_batch.json
+	PYTHONPATH=src XLA_FLAGS="--xla_force_host_platform_device_count=4" python -m benchmarks.shard_bench --json benchmarks/BENCH_shard.json
 
 perf-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only fig7 --json /tmp/BENCH_new.json
@@ -35,3 +37,19 @@ batch-bench:
 
 batch-smoke: batch-bench
 	PYTHONPATH=src python scripts/perf_smoke.py --batch /tmp/BENCH_batch_new.json benchmarks/BENCH_batch.json
+
+# sharded enumeration: differential test + bench + gate (4 forced host devices)
+shard-test:
+	PYTHONPATH=src XLA_FLAGS="--xla_force_host_platform_device_count=4" python -m pytest -q tests/test_shard_differential.py
+
+shard-bench:
+	PYTHONPATH=src XLA_FLAGS="--xla_force_host_platform_device_count=4" python -m benchmarks.shard_bench --json /tmp/BENCH_shard_new.json
+
+shard-smoke: shard-bench
+	PYTHONPATH=src python scripts/perf_smoke.py --shard /tmp/BENCH_shard_new.json benchmarks/BENCH_shard.json
+
+# documentation gates: link/anchor check, README quickstart smoke, docstrings
+docs-check:
+	PYTHONPATH=src python scripts/check_docs.py README.md docs
+	PYTHONPATH=src python scripts/run_readme.py
+	PYTHONPATH=src python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py

@@ -112,3 +112,19 @@ def run_method(method: str, query, data, *, limit=100_000, step_budget=None,
 
 def bench_row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def bench_env() -> dict:
+    """Host/device context recorded in every BENCH JSON header, so
+    committed baselines are comparable across hosts: device count,
+    platform, physical parallelism, and the 1-D enumeration mesh shape
+    those devices would form (what `MatchOptions(mesh="auto")` resolves
+    to). `scripts/perf_smoke.py --shard` reads this to decide whether a
+    CPU host has enough cores to judge the sharded speedup at all."""
+    import os
+
+    import jax
+    devs = jax.devices()
+    return {"devices": len(devs), "platform": devs[0].platform,
+            "cpu_count": os.cpu_count() or 1,
+            "mesh_shape": [len(devs)]}

@@ -91,8 +91,10 @@ def main() -> None:
     for row in rows:
         print(row, flush=True)
     if args.json:
+        from .common import bench_env
         with open(args.json, "w") as f:
-            json.dump({"rows": parse_rows(rows)}, f, indent=1, sort_keys=True)
+            json.dump({"env": bench_env(), "rows": parse_rows(rows)}, f,
+                      indent=1, sort_keys=True)
             f.write("\n")
 
 

@@ -1,6 +1,8 @@
 """Benchmark entrypoint: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the
-same rows machine-readable (BENCH_engine.json) for the CI perf smoke.
+same rows machine-readable (BENCH_engine.json) for the CI perf smoke, with
+an ``env`` header (devices / platform / mesh_shape) so baselines captured
+on different hosts stay comparable.
 
   PYTHONPATH=src python -m benchmarks.run              # fast subset (CI)
   PYTHONPATH=src python -m benchmarks.run --full       # larger workloads
@@ -69,9 +71,10 @@ def main() -> None:
             collected.append(row)
             print(row, flush=True)
     if args.json:
+        from .common import bench_env
         with open(args.json, "w") as f:
-            json.dump({"rows": parse_rows(collected)}, f, indent=1,
-                      sort_keys=True)
+            json.dump({"env": bench_env(), "rows": parse_rows(collected)},
+                      f, indent=1, sort_keys=True)
             f.write("\n")
 
 

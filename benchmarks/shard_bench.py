@@ -1,0 +1,102 @@
+"""Sharded vs single-device enumeration benchmark.
+
+Evidence for the sharded scheduler's acceptance criterion: on
+enumeration-bound fig7 workloads (the shared `fig7_workloads` mix, larger
+query sizes so enumeration dominates dispatch), warm per-query time for
+
+  * `seq`     — the single-device fused scheduler (mesh=None),
+  * `sharded` — the same queries with `mesh="auto"` over 4 forced host
+    devices (`XLA_FLAGS=--xla_force_host_platform_device_count=4`, set by
+    this module before jax loads, exactly like `launch/dryrun.py`).
+
+Rows: shard.<dataset>.<mode>,us_per_query,count=..;dispatches_per_query=..
+(sharded rows add shard_lanes=..;shard_rebalances=..). The JSON header
+records `devices`/`mesh_shape` so baselines are comparable across hosts.
+
+  PYTHONPATH=src python -m benchmarks.shard_bench                 # print CSV
+  PYTHONPATH=src python -m benchmarks.shard_bench --json [PATH]   # + JSON
+                                                 (default BENCH_shard.json)
+
+`scripts/perf_smoke.py --shard` gates the same-host sharded/seq ratio
+(mean >= 1.5x speedup, no dataset regressing past the tripwire) against
+the committed benchmarks/BENCH_shard.json baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+N_DEVICES = 4
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={N_DEVICES}").strip()
+
+import time  # noqa: E402
+
+from repro.api import MatchOptions  # noqa: E402
+
+from .common import bench_row, fig7_workloads, matcher_for  # noqa: E402
+
+
+def shard_throughput(scale=0.03, limit=200_000, rounds=3):
+    """Warm per-query timing rows for the sharded vs single-device
+    scheduler over enumeration-bound fig7 workloads (query sizes 6/8)."""
+    rows = []
+    for name, (data, sized) in fig7_workloads(
+            scale, sizes=(6, 8), per_size=2, seed=3).items():
+        queries = [q for _, q in sized]
+        if not queries:
+            continue
+        m = matcher_for(data)
+        for label, mesh in (("seq", None), ("sharded", "auto")):
+            opts = MatchOptions(engine="vector", tile_rows=512, limit=limit,
+                                mesh=mesh)
+            outs = [m.count(q, opts) for q in queries]   # warm compile + jit
+            best, derived = None, ""
+            for _ in range(rounds):
+                t0 = time.perf_counter()
+                outs = [m.count(q, opts) for q in queries]
+                dt = time.perf_counter() - t0
+                if best is None or dt < best:            # min: spikes only
+                    best = dt                            # ever inflate timings
+                    steps = sum(o.stats.device_steps for o in outs)
+                    derived = (f"count={sum(o.count for o in outs)}"
+                               f";dispatches_per_query="
+                               f"{steps / len(queries):.2f}")
+                    if mesh is not None:
+                        derived += (
+                            f";shard_lanes="
+                            f"{sum(o.stats.shard_lanes for o in outs)}"
+                            f";shard_rebalances="
+                            f"{sum(o.stats.shard_rebalances for o in outs)}")
+            rows.append(bench_row(f"shard.{name}.{label}",
+                                  best / len(queries), derived))
+    return rows
+
+
+def main() -> None:
+    from .common import bench_env
+    from .run import parse_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_shard.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to PATH (default BENCH_shard.json)")
+    args = ap.parse_args()
+    rows = shard_throughput(scale=0.08 if args.full else 0.03)
+    print("name,us_per_query,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"env": bench_env(), "rows": parse_rows(rows)}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

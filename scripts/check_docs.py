@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Docs link checker: validate relative links and heading anchors in
+markdown files, so README/docs cross-references cannot silently rot.
+
+Usage: python scripts/check_docs.py README.md docs [more files/dirs...]
+
+For every markdown link `[text](target)`:
+  * absolute URLs (http/https/mailto) are skipped;
+  * `path` must exist relative to the containing file's directory;
+  * `path#anchor` additionally requires a heading in the target file whose
+    GitHub slug equals `anchor`; `#anchor` alone checks the same file.
+
+Exit code 0 = all links resolve; 1 = broken links (listed); 2 = usage.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces to hyphens, drop everything
+    that is not alphanumeric / hyphen / underscore."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    slugs: set[str] = set()
+    for m in HEADING_RE.finditer(text):
+        slug = github_slug(m.group(1))
+        n, base = 0, slug
+        while slug in slugs:                    # duplicate headings: -1, -2
+            n += 1
+            slug = f"{base}-{n}"
+        slugs.add(slug)
+    return slugs
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    base_dir = os.path.dirname(os.path.abspath(path))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # URL scheme
+            continue
+        ref, _, anchor = target.partition("#")
+        tgt_path = (os.path.normpath(os.path.join(base_dir, ref)) if ref
+                    else os.path.abspath(path))
+        if not os.path.exists(tgt_path):
+            errors.append(f"{path}: broken link -> {target}")
+            continue
+        if anchor and os.path.isfile(tgt_path) and tgt_path.endswith(".md"):
+            if anchor not in anchors_of(tgt_path):
+                errors.append(f"{path}: missing anchor -> {target}")
+    return errors
+
+
+def collect(args: list[str]) -> list[str]:
+    files = []
+    for a in args:
+        if os.path.isdir(a):
+            files += sorted(os.path.join(a, f) for f in os.listdir(a)
+                            if f.endswith(".md"))
+        elif a.endswith(".md"):
+            files.append(a)
+    return files
+
+
+def main() -> int:
+    files = collect(sys.argv[1:])
+    if not files:
+        print(__doc__)
+        return 2
+    errors = []
+    for path in files:
+        errors += check_file(path)
+    for e in errors:
+        print(f"check-docs: {e}")
+    print(f"check-docs: {len(files)} files, "
+          f"{'FAIL: ' + str(len(errors)) + ' broken' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -41,3 +41,26 @@ python -m benchmarks.batch_bench --json "$batch_json"
 
 echo "== batch smoke (batched/seq queries-per-second gate) =="
 python scripts/perf_smoke.py --batch "$batch_json" benchmarks/BENCH_batch.json
+
+echo "== shard differential (4 forced host devices) =="
+# sharded == sequential == ref across the strategy workloads; runs in its
+# own process because the device count must be fixed before jax loads
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m pytest -q tests/test_shard_differential.py
+
+echo "== shard bench (sharded vs single-device enumeration) =="
+shard_json="$(mktemp /tmp/BENCH_shard_new.XXXXXX.json)"
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m benchmarks.shard_bench --json "$shard_json"
+
+echo "== shard smoke (sharded/seq speedup gate) =="
+python scripts/perf_smoke.py --shard "$shard_json" benchmarks/BENCH_shard.json
+
+echo "== docs: relative links + anchors =="
+python scripts/check_docs.py README.md docs
+
+echo "== docs: README quickstart executes =="
+python scripts/run_readme.py
+
+echo "== docs: public-surface docstring gate =="
+python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py

@@ -7,6 +7,25 @@ its throughput multiplier over the sequential path.
 Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --compile NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --batch NEW.json [BASELINE.json]
+       python scripts/perf_smoke.py --shard NEW.json [BASELINE.json]
+
+Shard mode: both files are `benchmarks.shard_bench --json` outputs (rows
+shard.<ds>.seq / shard.<ds>.sharded, produced under 4 forced host
+devices). The gated metric is the same-host ratio sharded_us / seq_us per
+dataset. The gate mirrors the batch gate: the mean per-dataset ratio must
+stay <= 1/SHARD_SPEEDUP_MIN (the >=1.5x mean speedup criterion at 4 host
+devices), and no dataset may regress past SHARD_REGRESS_MAX. Datasets
+whose sequential row sits below SHARD_FLOOR_US per query are noise-regime
+and skipped; if every dataset is below the floor the mean gate is skipped
+with a notice (not a failure). One extra notice condition that the other
+modes don't need: forced host-platform devices *share* the machine's
+cores, so on a CPU host with cpu_count <= devices (the bench JSON's `env`
+header records both) there is no physical parallelism to measure — every
+dispatch serializes on the same cores and the criterion is unjudgeable.
+The gate then only enforces the regression tripwire scaled by the
+oversubscription factor and passes with notice; on hosts with more cores
+than shard devices (including real TPU meshes) the full speedup gate
+applies.
 
 Batch mode: both files are `benchmarks.batch_bench --json` outputs (rows
 batch.<ds>.seq / batch.<ds>.batched). The gated metric is the same-host
@@ -66,6 +85,11 @@ COMPILE_FLOOR_US = 10_000.0
 BATCH_SPEEDUP_MIN = 2.0          # mean queries/sec multiplier, batched vs seq
 BATCH_REGRESS_MAX = 1.25         # no dataset may run >25% slower batched
 BATCH_FLOOR_US = 150.0           # per-query; below this both rows are noise
+SHARD_SPEEDUP_MIN = 1.5          # mean speedup, sharded vs seq (4 devices)
+SHARD_REGRESS_MAX = 1.25         # no dataset may run >25% slower sharded
+SHARD_FLOOR_US = 5000.0          # per-query; below this the workload is a
+                                 # single-dispatch overhead measurement,
+                                 # not enumeration-bound — no shard signal
 
 
 def load(path: str) -> dict:
@@ -120,6 +144,76 @@ def batch_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
         out[ds] = (row["us_per_call"] / max(seq["us_per_call"], 1e-9),
                    row["us_per_call"], seq["us_per_call"])
     return out
+
+
+def shard_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
+    """dataset -> (sharded/seq ratio, sharded us, seq us)."""
+    out = {}
+    for name, row in rows.items():
+        parts = name.split(".")
+        if len(parts) != 3 or parts[0] != "shard" or parts[2] != "sharded":
+            continue
+        ds = parts[1]
+        seq = rows.get(f"shard.{ds}.seq")
+        if not seq:
+            continue
+        out[ds] = (row["us_per_call"] / max(seq["us_per_call"], 1e-9),
+                   row["us_per_call"], seq["us_per_call"])
+    return out
+
+
+def main_shard(new_path: str, base_path: str) -> int:
+    """Gate the sharded/seq per-query ratio (see module docstring)."""
+    with open(new_path) as f:
+        doc = json.load(f)
+    env = doc.get("env", {})
+    new = shard_ratios(doc["rows"])
+    base = shard_ratios(load(base_path))
+    if not new:
+        print("perf-smoke: no shard.<ds>.seq/sharded row pairs found; "
+              "did benchmarks.shard_bench run with --json?")
+        return 2
+    devices = int(env.get("devices", 0))
+    cores = int(env.get("cpu_count", 0))
+    oversub = env.get("platform") == "cpu" and 0 < cores <= devices
+    # forced host devices sharing too few cores: no physical parallelism
+    # exists, so the speedup criterion is unjudgeable — keep only a gross
+    # regression tripwire scaled by the full serialization factor
+    regress_max = (SHARD_REGRESS_MAX * max(devices, 1) if oversub
+                   else SHARD_REGRESS_MAX)
+    failed = False
+    judged = []
+    for ds, (ratio, shd_us, seq_us) in sorted(new.items()):
+        ctx = (f" (baseline {base[ds][0]:.3f})" if ds in base else "")
+        if seq_us < SHARD_FLOOR_US:
+            verdict = "ok (below noise floor)"
+        elif ratio > regress_max:
+            verdict = "FAIL (sharded slower than single-device)"
+            failed = True
+        elif oversub:
+            verdict = "ok (notice: host cores <= shard devices)"
+        else:
+            judged.append(ratio)
+            verdict = "ok"
+        print(f"perf-smoke: shard {ds}: sharded/seq {ratio:.3f} "
+              f"({seq_us / max(shd_us, 1e-9):.1f}x){ctx} {verdict}")
+    limit = 1.0 / SHARD_SPEEDUP_MIN
+    if oversub:
+        print(f"perf-smoke: shard MEAN: pass with notice — cpu host has "
+              f"{cores} cores for {devices} forced devices, no physical "
+              f"parallelism to judge (speedup gate applies on hosts with "
+              f"cores > devices)")
+        return 1 if failed else 0
+    if not judged:
+        print("perf-smoke: shard MEAN: no dataset above noise floor; "
+              "mean gate skipped")
+        return 1 if failed else 0
+    mean = sum(judged) / len(judged)
+    mean_ok = mean <= limit
+    print(f"perf-smoke: shard MEAN: sharded/seq {mean:.3f} "
+          f"({1.0 / max(mean, 1e-9):.1f}x, limit {limit:.2f}) "
+          f"{'ok' if mean_ok else 'FAIL'}")
+    return 1 if (failed or not mean_ok) else 0
 
 
 def main_batch(new_path: str, base_path: str) -> int:
@@ -196,7 +290,8 @@ def main_compile(new_path: str, base_path: str) -> int:
 
 
 def main() -> int:
-    args = [a for a in sys.argv[1:] if a not in ("--compile", "--batch")]
+    args = [a for a in sys.argv[1:]
+            if a not in ("--compile", "--batch", "--shard")]
     if not args:
         print(__doc__)
         return 2
@@ -206,6 +301,9 @@ def main() -> int:
     if "--batch" in sys.argv[1:]:
         return main_batch(args[0], args[1] if len(args) > 1 else
                           "benchmarks/BENCH_batch.json")
+    if "--shard" in sys.argv[1:]:
+        return main_shard(args[0], args[1] if len(args) > 1 else
+                          "benchmarks/BENCH_shard.json")
     new_path = args[0]
     base_path = args[1] if len(args) > 1 else \
         "benchmarks/BENCH_engine.json"

@@ -38,6 +38,8 @@ class Dataset:
     # ------------------------------------------------------------ constructors
     @classmethod
     def from_graph(cls, graph: Graph, *, name: str | None = None) -> "Dataset":
+        """Preprocess an existing Graph into a Dataset (builds the shared
+        DataGraphIndex once; `name` is cosmetic, used in reprs/logs)."""
         return cls(graph=graph, index=build_data_index(graph), name=name)
 
     @classmethod
@@ -47,6 +49,9 @@ class Dataset:
                    edge_labels: Sequence[int] | np.ndarray | None = None,
                    n_labels: int | None = None,
                    name: str | None = None) -> "Dataset":
+        """Build a canonical Graph from an edge list (deduped, sorted CSR;
+        optionally directed / edge-labeled) and preprocess it. Raises
+        whatever `build_graph` raises on malformed input."""
         g = build_graph(n, edges, labels, directed=directed,
                         edge_labels=edge_labels, n_labels=n_labels)
         return cls.from_graph(g, name=name)
@@ -61,24 +66,31 @@ class Dataset:
     @classmethod
     def random(cls, n: int, avg_degree: float, n_labels: int, *,
                seed: int = 0, **kw) -> "Dataset":
+        """Seeded random labeled data graph (`synthetic_labeled_graph`
+        kwargs pass through: power_law, directed, n_edge_labels, ...)."""
         return cls.from_graph(
             synthetic_labeled_graph(n, avg_degree, n_labels, seed, **kw))
 
     # ------------------------------------------------------------- properties
     @property
     def n(self) -> int:
+        """Number of data vertices."""
         return self.graph.n
 
     @property
     def n_edges(self) -> int:
+        """Number of data edges (undirected edges counted once)."""
         return self.graph.n_edges
 
     @property
     def n_labels(self) -> int:
+        """Size of the vertex label alphabet."""
         return self.graph.n_labels
 
     @property
     def signature(self) -> str:
+        """Canonical content hash of the data graph (memoized); part of
+        external cache keys alongside query signatures."""
         if self._signature is None:
             self._signature = graph_signature(self.graph)
         return self._signature

@@ -62,6 +62,10 @@ class MatchOutcome:
 
 @dataclasses.dataclass(frozen=True)
 class CacheInfo:
+    """Plan-cache counters returned by `Matcher.cache_info()` (hits/misses
+    are cumulative for the Matcher's lifetime; size/maxsize describe the
+    LRU)."""
+
     hits: int
     misses: int
     size: int
@@ -86,15 +90,22 @@ class CompiledQuery:
 
     @property
     def plan(self):
+        """The vector-engine MatchingPlan (packed bitmap tables), built
+        lazily on first access and shared by every engine configuration."""
         if self._plan is None:
             self._plan = build_plan(self.cs, self.an)
         return self._plan
 
-    def vector_engine(self, opts: MatchOptions, intersect_fn=None):
+    def vector_engine(self, opts: MatchOptions, intersect_fn=None,
+                      mesh=None):
+        """Build (or reuse) the VectorEngine for this compiled query under
+        the given runtime knobs. `mesh` is an already-resolved jax Mesh (or
+        None); engines are keyed by every knob that changes the compiled
+        step functions, so option changes never silently share state."""
         from repro.core.engine import VectorEngine
         key = (opts.tile_rows, opts.use_cv, opts.use_dedup,
                opts.use_cer_buffer, opts.cer_buffer_slots, opts.pack_tiles,
-               opts.intersect, id(intersect_fn))
+               opts.intersect, id(intersect_fn), mesh)
         eng = self._engines.get(key)
         if eng is None:
             eng = VectorEngine(self.cs, self.an, tile_rows=opts.tile_rows,
@@ -103,12 +114,16 @@ class CompiledQuery:
                                cer_buffer_slots=opts.cer_buffer_slots,
                                pack_tiles=opts.pack_tiles,
                                intersect=opts.intersect,
-                               intersect_fn=intersect_fn, plan=self.plan)
+                               intersect_fn=intersect_fn, plan=self.plan,
+                               mesh=mesh)
             self._engines[key] = eng
         return eng
 
     # ---------------------------------------------------------------- explain
     def resolve_engine(self, engine: str) -> str:
+        """Resolve "auto" to "ref" or "vector" for this compiled query (the
+        deterministic heuristic documented on the Matcher class); explicit
+        engine names pass through unchanged."""
         if engine != "auto":
             return engine
         g = self.dataset.graph
@@ -119,6 +134,9 @@ class CompiledQuery:
         return "vector"
 
     def explain(self, engine: str = "auto") -> str:
+        """Human-readable compilation report: resolved engine, matching
+        order, black/white coloring, per-level candidate sizes, and (for
+        the vector engine) the plan's stage list."""
         an, cs = self.an, self.cs
         resolved = self.resolve_engine(engine)
         sizes = cs.sizes()
@@ -185,13 +203,18 @@ class Matcher:
         # Entries hold their plans strongly, so ids stay unambiguous.
         self._batch_cache: OrderedDict[tuple, object] = OrderedDict()
         self._batch_cache_max = 8
+        # resolved enumeration meshes, memoized per MatchOptions.mesh value
+        self._meshes: dict = {}
 
     # ------------------------------------------------------------------ cache
     def cache_info(self) -> CacheInfo:
+        """Plan-cache counters (cumulative hits/misses, current size)."""
         return CacheInfo(hits=self._hits, misses=self._misses,
                          size=len(self._cache), maxsize=self._maxsize)
 
     def clear_cache(self) -> None:
+        """Drop every cached CompiledQuery and warm superbatch scheduler
+        (hit/miss counters are preserved)."""
         self._cache.clear()
         # warm superbatch schedulers pin their bucket's plans plus stacked
         # device tables; clearing the plan cache must release those too
@@ -201,6 +224,19 @@ class Matcher:
                          overrides: dict) -> MatchOptions:
         base = options if options is not None else self.options
         return base.replace(**overrides) if overrides else base
+
+    def _resolve_mesh(self, opts: MatchOptions):
+        """Resolve `opts.mesh` ("auto" | device count | None) to a jax Mesh
+        for sharded enumeration, or None for the single-device path.
+        Resolved meshes are memoized per option value; a host with one
+        device always resolves to None (bit-identical fallback)."""
+        if opts.mesh is None:
+            return None
+        if opts.mesh not in self._meshes:
+            from repro.launch.mesh import make_enum_mesh
+            self._meshes[opts.mesh] = make_enum_mesh(
+                None if opts.mesh == "auto" else opts.mesh)
+        return self._meshes[opts.mesh]
 
     # ---------------------------------------------------------------- compile
     def compile(self, query: Graph, options: MatchOptions | None = None,
@@ -267,7 +303,8 @@ class Matcher:
                                 timed_out=res.timed_out, stats=res.stats,
                                 embeddings=res.embeddings, plan_cached=cached,
                                 compile_s=compile_s)
-        eng = cq.vector_engine(opts, intersect_fn=self._intersect_fn)
+        eng = cq.vector_engine(opts, intersect_fn=self._intersect_fn,
+                               mesh=self._resolve_mesh(opts))
         t0 = time.perf_counter()
         res = eng.run(limit=opts.limit, max_steps=opts.budget,
                       materialize=opts.materialize)
@@ -372,18 +409,27 @@ class Matcher:
         return outcomes
 
     def _superbatch_for(self, sig: tuple, cqs: list, opts: MatchOptions):
-        from repro.core.scheduler import SuperbatchScheduler
+        """Build (or reuse) the warm superbatch scheduler for one shape
+        bucket; a resolved multi-device mesh selects the sharded variant
+        (superbatch query-id lanes compose with the shard axis)."""
+        mesh = self._resolve_mesh(opts)
         key = (sig, tuple(id(cq.plan) for cq in cqs), opts.use_cv,
                opts.use_dedup, opts.use_cer_buffer, opts.cer_buffer_slots,
-               opts.pack_tiles)
+               opts.pack_tiles, mesh)
         sched = self._batch_cache.get(key)
         if sched is None:
-            sched = SuperbatchScheduler(
-                [cq.plan for cq in cqs], tile_rows=opts.tile_rows,
-                use_cv=opts.use_cv, use_dedup=opts.use_dedup,
-                use_cer_buffer=opts.use_cer_buffer,
-                cer_buffer_slots=opts.cer_buffer_slots,
-                pack_tiles=opts.pack_tiles)
+            kw = dict(tile_rows=opts.tile_rows, use_cv=opts.use_cv,
+                      use_dedup=opts.use_dedup,
+                      use_cer_buffer=opts.use_cer_buffer,
+                      cer_buffer_slots=opts.cer_buffer_slots,
+                      pack_tiles=opts.pack_tiles)
+            plans = [cq.plan for cq in cqs]
+            if mesh is not None:
+                from repro.core.shard import ShardedSuperbatchScheduler
+                sched = ShardedSuperbatchScheduler(plans, mesh=mesh, **kw)
+            else:
+                from repro.core.scheduler import SuperbatchScheduler
+                sched = SuperbatchScheduler(plans, **kw)
             self._batch_cache[key] = sched
             while len(self._batch_cache) > self._batch_cache_max:
                 self._batch_cache.popitem(last=False)

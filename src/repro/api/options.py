@@ -54,6 +54,11 @@ class MatchOptions:
     intersect       : intersect kernel — "auto" (Pallas compiled on TPU, jnp
                       oracle elsewhere), "pallas" (force the kernel;
                       interpret-mode off-TPU), or "jnp".
+    mesh            : multi-device sharded enumeration (vector engine):
+                      None = single device (default), "auto" = every local
+                      device, an int = that many devices. Resolved sizes of
+                      1 fall back bit-identically to the single-device
+                      path; see docs/engine.md §Sharded enumeration.
     limit           : stop after this many embeddings.
     budget          : device/search step budget (`step_budget` of the ref
                       engine, `max_steps` = jitted dispatches of the vector
@@ -75,6 +80,7 @@ class MatchOptions:
     cer_buffer_slots: int = 256
     pack_tiles: bool = True
     intersect: str = "auto"
+    mesh: str | int | None = None
     limit: int = 1_000_000
     budget: int | None = None
     refine_rounds: int = 3
@@ -103,6 +109,11 @@ class MatchOptions:
                 or self.cer_buffer_slots < 1):
             raise ValueError(f"cer_buffer_slots must be a positive int, "
                              f"got {self.cer_buffer_slots!r}")
+        if self.mesh is not None and self.mesh != "auto" and (
+                not isinstance(self.mesh, int) or isinstance(self.mesh, bool)
+                or self.mesh < 1):
+            raise ValueError(f"mesh must be None, \"auto\", or a positive "
+                             f"int device count, got {self.mesh!r}")
         if not isinstance(self.limit, int) or self.limit < 1:
             raise ValueError(f"limit must be a positive int, "
                              f"got {self.limit!r}")

@@ -19,6 +19,9 @@ __all__ = ["graph_signature"]
 
 
 def graph_signature(g: Graph) -> str:
+    """Stable 128-bit hex content hash of a canonical-CSR Graph
+    (directedness, labels, adjacency, edge labels). Equal for structurally
+    identical Graph objects; not isomorphism-invariant."""
     h = hashlib.blake2b(digest_size=16)
     h.update(b"d" if g.directed else b"u")
     for arr in (g.labels, g.indptr, g.indices):

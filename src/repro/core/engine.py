@@ -72,6 +72,9 @@ class VectorStats:
     packed_tiles: int = 0            # sibling-tile merges (frontier compaction)
     batched_queries: int = 0         # queries advanced by this superbatch run
     bucket_recompiles: int = 0       # batched supersteps jitted fresh this run
+    shard_lanes: int = 0             # live lanes dispatched by sharded supersteps
+    shard_rebalances: int = 0        # idle lanes refilled by chunk splits /
+                                     # pending flushes (host-side rebalance)
     leaf_tiles: int = 0
     leaf_overflows: int = 0          # uint64 leaf reductions that fell back to host
     peak_stack: int = 0
@@ -137,9 +140,13 @@ class VectorEngine:
                  use_dedup: bool = True, intersect_fn=None,
                  plan: MatchingPlan | None = None, intersect: str = "auto",
                  use_cer_buffer: bool = True, cer_buffer_slots: int = 256,
-                 pack_tiles: bool = True):
+                 pack_tiles: bool = True, mesh=None):
         # `plan` lets a session layer (repro.api.Matcher) build the plan once
-        # and share it across engine configurations.
+        # and share it across engine configurations. `mesh` is a jax Mesh
+        # with a "data" axis (launch.mesh.make_enum_mesh); size > 1 selects
+        # the sharded scheduler (core.shard), None/size-1 the single-device
+        # path; each shard lane runs full-width tiles, so one sharded
+        # dispatch covers up to n_shards frontier chunks at once.
         self.plan = build_plan(cs, an) if plan is None else plan
         self.cs, self.an = cs, an
         self.t = tile_rows
@@ -148,6 +155,7 @@ class VectorEngine:
         self.use_cer_buffer = use_cer_buffer
         self.cer_buffer_slots = cer_buffer_slots
         self.pack_tiles = pack_tiles
+        self.mesh = mesh
         if intersect_fn is None:
             intersect_fn = _resolve_intersect_fn(intersect)
         self.intersect_fn = intersect_fn  # pluggable kernel (Pallas ops)
@@ -422,9 +430,13 @@ class VectorEngine:
     # --------------------------------------------------------------- schedule
     def run(self, *, limit: int = 1_000_000, max_steps: int | None = None,
             materialize: bool = False) -> VectorMatchResult:
-        from .scheduler import TileScheduler
         if self._scheduler is None:
-            self._scheduler = TileScheduler(self)
+            if self.mesh is not None and self.mesh.devices.size > 1:
+                from .shard import ShardedTileScheduler
+                self._scheduler = ShardedTileScheduler(self, self.mesh)
+            else:
+                from .scheduler import TileScheduler
+                self._scheduler = TileScheduler(self)
         return self._scheduler.run(limit=limit, max_steps=max_steps,
                                    materialize=materialize)
 
@@ -474,7 +486,7 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
                  intersect_fn=None, order: list[int] | None = None,
                  intersect: str = "auto", use_cer_buffer: bool = True,
                  cer_buffer_slots: int = 256, pack_tiles: bool = True,
-                 ) -> VectorMatchResult:
+                 mesh=None) -> VectorMatchResult:
     """End-to-end vectorized CEMR matching (preprocess + tile enumeration)."""
     cs, an = preprocess(query, data, encoding=encoding, order=order)
     if any(c.shape[0] == 0 for c in cs.cand):
@@ -484,5 +496,5 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
                        use_dedup=use_dedup, intersect_fn=intersect_fn,
                        intersect=intersect, use_cer_buffer=use_cer_buffer,
                        cer_buffer_slots=cer_buffer_slots,
-                       pack_tiles=pack_tiles)
+                       pack_tiles=pack_tiles, mesh=mesh)
     return eng.run(limit=limit, max_steps=max_steps, materialize=materialize)

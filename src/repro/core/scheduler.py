@@ -335,16 +335,20 @@ class TileScheduler:
                 return segs
             si = exit_si
 
-    def _superstep(self, b: int):
-        """One jitted run-to-completion call from boundary `b`: expand the
-        given frontier chunk, then keep descending — each deeper boundary's
-        frontier is expanded in place while it fits one chunk (traced
-        `proceed` mask; overshooting work is masked dead and contributes
-        zero) — ending in the leaf reduction. Returns every intermediate
-        frontier so the host can resume exactly where the ladder stopped."""
-        key = ("ss", b)
-        if key in self._jit:
-            return self._jit[key]
+    def _build_step(self, b: int):
+        """Construct the untraced run-to-completion step for boundary `b`:
+        expand the given frontier chunk, then keep descending — each deeper
+        boundary's frontier is expanded in place while it fits one chunk
+        (traced `proceed` mask; overshooting work is masked dead and
+        contributes zero) — ending in the leaf reduction. Returns every
+        intermediate frontier so the host can resume exactly where the
+        ladder stopped.
+
+        Returns (step, exit_bounds, seg_cer, n_computes, gather_ops). The
+        step takes an optional trailing `part` bitmap (root_words,) that is
+        ANDed into the root extension — the sharded scheduler's per-shard
+        partition of the level-0 candidate rows; `part=None` (the
+        single-device path) leaves the root mask untouched."""
         eng = self.eng
         t = self.t
         cer_set = set(self._cer_stages)
@@ -386,12 +390,18 @@ class TileScheduler:
             r, pop, ok = eng.finish_compute(tile, r, pop, con)
             return r, pop, ok, acc
 
-        def step(tile, r_in, cursor, bufs, tables, masks):
+        def step(tile, r_in, cursor, bufs, tables, masks, part=None):
             bufs = dict(bufs)
             acc = [jnp.int32(0)] * 4                     # hits/misses/seen/ins
             if root:
                 r0, pop0 = root_compute_r(tile, tables, masks)
                 r_in, _, _ = eng.finish_compute(tile, r0, pop0, root_con)
+                if part is not None:
+                    # shard partition of the *pruned* root extension: the
+                    # contained-vertex threshold must see the global
+                    # popcount, never a partition's (a sub-threshold
+                    # partition of a viable root set is still live work)
+                    r_in = r_in & part[None, :]
             frontiers = []                               # (tile, r) per bound
             alive_l, total_l = [], []
             proceed = None
@@ -431,8 +441,18 @@ class TileScheduler:
                 proceed = ok_here if proceed is None else (proceed & ok_here)
                 cur_tile, cur_r, cur_cursor = cur, r2, jnp.int32(0)
 
-        entry = (jax.jit(step), exit_bounds, sorted(set(seg_cer)),
-                 n_computes, gather_ops)
+        return (step, exit_bounds, sorted(set(seg_cer)), n_computes,
+                gather_ops)
+
+    def _superstep(self, b: int):
+        """Cached jitted wrapper of `_build_step(b)` — one device dispatch
+        per call on the single-device path."""
+        key = ("ss", b)
+        if key in self._jit:
+            return self._jit[key]
+        step, exit_bounds, seg_cer, n_computes, gather_ops = \
+            self._build_step(b)
+        entry = (jax.jit(step), exit_bounds, seg_cer, n_computes, gather_ops)
         self._jit[key] = entry
         return entry
 
@@ -464,6 +484,10 @@ class TileScheduler:
     # ------------------------------------------------------------------- run
     def run(self, *, limit: int = 1_000_000, max_steps: int | None = None,
             materialize: bool = False) -> VectorMatchResult:
+        """Enumerate to completion (or until `limit` embeddings /
+        `max_steps` jitted dispatches, whichever first). Returns a
+        VectorMatchResult; `materialize=True` additionally decodes explicit
+        embeddings from every counted leaf tile."""
         # use_cer_buffer=False selects the stage-at-a-time compat loop (the
         # documented legacy architecture), with or without its per-tile
         # bucketed CER (use_dedup)
@@ -817,6 +841,7 @@ class BatchProgram:
 
     # ----------------------------------------------------------- static shape
     def dedup_slots(self, si: int) -> tuple:
+        """CER dedup-key idx slots of stage `si` (empty = CER-ineligible)."""
         stg = self._stages[si]
         return stg[8] if stg[0] == "e" else ()
 
@@ -960,13 +985,16 @@ class BatchProgram:
         return leaf
 
     # ------------------------------------------------------------- superstep
-    def superstep(self, b: int):
-        """Batched mirror of TileScheduler._superstep: one jitted
-        run-to-completion call advancing a mixed-query frontier chunk from
-        boundary `b` down to the per-query leaf reduction."""
-        key = ("ss", b)
-        if key in self._jit:
-            return self._jit[key]
+    def build_step(self, b: int):
+        """Construct the untraced batched run-to-completion step for
+        boundary `b` — the query-id-lane mirror of
+        `TileScheduler._build_step`.
+
+        Returns (step, exit_bounds, seg_cer, n_computes, gather_ops). The
+        step's optional trailing `part` bitmap (n_queries, root_words) is
+        ANDed per query into the root extension — the sharded scheduler's
+        per-shard partition of every query's level-0 candidate rows;
+        `part=None` (single-device) leaves the root masks untouched."""
         t = self.t
         cer_set = set(self._cer_stages)
         segs = self._ladder(b)
@@ -1005,12 +1033,17 @@ class BatchProgram:
             r, pop, ok = self._finish(tile, r, pop, con_key, data)
             return r, pop, ok, acc
 
-        def step(tile, r_in, cursor, bufs, data, active):
+        def step(tile, r_in, cursor, bufs, data, active, part=None):
             bufs = dict(bufs)
             acc = [jnp.int32(0)] * 4                 # hits/misses/seen/ins
             if root:
                 r0, pop0 = root_compute_r(tile, data)
                 r_in, _, _ = self._finish(tile, r0, pop0, root_con, data)
+                if part is not None:
+                    # per-query shard slice of the *pruned* root extension
+                    # (thresholds apply to the global per-query popcount,
+                    # never to one partition's — see TileScheduler)
+                    r_in = r_in & part[tile["qid"]]
             frontiers = []
             alive_l, total_l = [], []
             proceed = None
@@ -1058,8 +1091,20 @@ class BatchProgram:
                 proceed = ok_here if proceed is None else (proceed & ok_here)
                 cur_tile, cur_r, cur_cursor = cur, r2, jnp.int32(0)
 
-        entry = (jax.jit(step), exit_bounds, sorted(set(seg_cer)),
-                 n_computes, gather_ops)
+        return (step, exit_bounds, sorted(set(seg_cer)), n_computes,
+                gather_ops)
+
+    def superstep(self, b: int):
+        """Cached jitted wrapper of `build_step(b)`: one device dispatch
+        advancing a mixed-query frontier chunk from boundary `b` down to the
+        per-query leaf reduction. Fresh traces bump `compiled_supersteps`
+        (surfaced as `VectorStats.bucket_recompiles`)."""
+        key = ("ss", b)
+        if key in self._jit:
+            return self._jit[key]
+        step, exit_bounds, seg_cer, n_computes, gather_ops = \
+            self.build_step(b)
+        entry = (jax.jit(step), exit_bounds, seg_cer, n_computes, gather_ops)
         self._jit[key] = entry
         self.compiled_supersteps += 1
         return entry

@@ -1,9 +1,14 @@
-"""Logical-axis sharding context.
+"""Logical-axis sharding context plus shard-partition helpers.
 
 Models call `constrain(x, "logical_name")` at strategic points; the launcher
 installs a rule table mapping logical names to PartitionSpecs for the active
 mesh. Outside a context (unit tests, single device) constrain is a no-op, so
 model code is mesh-agnostic.
+
+`partition_bitmap` is the work-partitioning half: the sharded enumeration
+scheduler (`repro.core.shard`) splits the root candidate bitmap across the
+`data` axis with it, weighting each candidate by its estimated subtree cost
+(`repro.core.plan.root_extension_weights`).
 """
 from __future__ import annotations
 
@@ -11,9 +16,11 @@ import contextlib
 import threading
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-__all__ = ["sharding_ctx", "constrain", "P", "current_rules"]
+__all__ = ["sharding_ctx", "constrain", "P", "current_rules",
+           "partition_bitmap"]
 
 _tls = threading.local()
 
@@ -46,3 +53,40 @@ def constrain(x, name: str):
     except ValueError:
         # shape not divisible by the requested axis — fall back to replicated
         return x
+
+
+def partition_bitmap(mask: np.ndarray, weights: np.ndarray | None,
+                     n_shards: int):
+    """Greedy weight-balanced disjoint partition of a bitmap's set bits.
+
+    Args:
+        mask: (W,) uint32 packed bitmap whose set bits are the work items.
+        weights: per-bit-position cost estimates, length >= 32*W (e.g.
+            `plan.root_extension_weights`); None = uniform.
+        n_shards: number of partitions.
+
+    Returns:
+        (parts, counts): parts is (n_shards, W) uint32 with
+        OR(parts) == mask and pairwise-disjoint shards; counts is
+        (n_shards,) int64 set bits per shard. Bits are assigned
+        heaviest-first to the currently lightest shard, so the result is
+        deterministic; when there are fewer set bits than shards the tail
+        shards come back empty (counts == 0).
+    """
+    mask = np.ascontiguousarray(mask, dtype=np.uint32)
+    parts = np.zeros((n_shards, mask.shape[0]), np.uint32)
+    counts = np.zeros(n_shards, np.int64)
+    bits = np.nonzero(np.unpackbits(mask.view(np.uint8),
+                                    bitorder="little"))[0]
+    if bits.size == 0:
+        return parts, counts
+    wb = (np.ones(bits.shape[0], np.float64) if weights is None
+          else np.asarray(weights, np.float64)[bits])
+    loads = np.zeros(n_shards, np.float64)
+    for i in np.argsort(-wb, kind="stable"):
+        b = int(bits[i])
+        s = int(np.argmin(loads))
+        loads[s] += wb[i]
+        parts[s, b >> 5] |= np.uint32(1) << np.uint32(b & 31)
+        counts[s] += 1
+    return parts, counts

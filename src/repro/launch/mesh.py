@@ -3,13 +3,16 @@
 Defined as functions (never module-level constants) so importing this module
 does not touch jax device state. The dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import
-to build these meshes on a CPU host.
+to build these meshes on a CPU host; `benchmarks/shard_bench.py` and the
+shard differential tests use a count of 4 the same way.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_enum_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,3 +29,24 @@ def make_local_mesh(data: int | None = None, model: int = 1):
     if data is None:
         data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_enum_mesh(n_devices: int | None = None):
+    """1-D ("data",) mesh for sharded subgraph enumeration.
+
+    Args:
+        n_devices: devices to use; None = every local device. Clamped to
+            the available device count.
+
+    Returns:
+        A jax Mesh over the first `n` devices, or None when the resolved
+        size is 1 — callers (Matcher / VectorEngine) treat None as "use the
+        single-device scheduler", which keeps the one-device fallback
+        bit-identical to the unsharded path by construction.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else max(1, min(int(n_devices),
+                                                       len(devs)))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), ("data",))
