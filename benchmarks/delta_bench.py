@@ -1,0 +1,133 @@
+"""Streaming-delta benchmark: incremental count maintenance vs full recount.
+
+Evidence for the streaming subsystem's acceptance criterion: on the shared
+fig7 datasets, a stream of small update batches (a few edge inserts +
+deletes each, `repro.streaming.random_delta`) is applied while a fixed set
+of standing queries' counts are kept current two ways:
+
+  * `full`  — the pre-streaming posture: `Dataset.apply_delta` (index
+    maintenance) followed by a from-scratch recount of every standing query
+    on the new graph (a fresh plan compile each time — the old plan is
+    stale);
+  * `delta` — `Matcher.count_delta`: the same index maintenance, but counts
+    roll forward through the delta identity base + created - destroyed,
+    where both terms are pinned enumerations over only the delta's edges.
+
+Both modes process the identical delta stream and must agree on every final
+count (asserted). Both run the reference DFS engine (the validated engine
+for every regime and the stable timing denominator — delta-mode's advantage
+is doing *less enumeration*, not running a different engine; vector timings
+would fold jit-compilation churn into the `full` rows and overstate it).
+
+Rows: delta.<dataset>.<mode>,us_per_update,count=..;queries=..;updates=..
+(delta rows add created=..;destroyed=..;fallbacks=..).
+
+  PYTHONPATH=src python -m benchmarks.delta_bench                 # print CSV
+  PYTHONPATH=src python -m benchmarks.delta_bench --json [PATH]   # + JSON
+                                                 (default BENCH_delta.json)
+
+`scripts/perf_smoke.py --delta` gates the same-host delta/full ratio
+against the committed benchmarks/BENCH_delta.json baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.api import Dataset, Matcher, MatchOptions
+from repro.streaming import apply_delta_reference, random_delta
+
+from .common import bench_row, fig7_workloads
+
+N_UPDATES = 8          # update batches per dataset
+OPS_PER_UPDATE = 3     # edge inserts and deletes per batch ("small batch")
+N_STANDING = 4         # standing queries kept current through the stream
+
+
+def delta_stream(graph, n_updates=N_UPDATES, ops=OPS_PER_UPDATE, seed=0):
+    """A chained sequence of valid deltas: each is generated against the
+    graph as it stands after the previous ones, so both modes can apply the
+    identical stream in order."""
+    deltas = []
+    g = graph
+    for k in range(n_updates):
+        d = random_delta(g, seed * 977 + k, n_edge_inserts=ops,
+                         n_edge_deletes=ops)
+        deltas.append(d)
+        g = apply_delta_reference(g, d)
+    return deltas
+
+
+def delta_vs_full(scale=0.03, limit=1_000_000):
+    rows = []
+    opts = MatchOptions(engine="ref", limit=limit)
+    for name, (data, sized) in fig7_workloads(scale).items():
+        queries = [q for _, q in sized][:N_STANDING]
+        if not queries:
+            continue
+        deltas = delta_stream(data)
+
+        # delta mode: seed exact bases once, then roll forward per update
+        ds = Dataset.from_graph(data)
+        m = Matcher(ds, opts)
+        for q in queries:
+            m.count(q)
+        created = destroyed = fallbacks = 0
+        t0 = time.perf_counter()
+        for d in deltas:
+            outs = m.count_delta(queries, d)
+            for o in outs:
+                if o.fallback:
+                    fallbacks += 1
+                else:
+                    created += o.created
+                    destroyed += o.destroyed
+        dt_delta = time.perf_counter() - t0
+        delta_counts = [o.count for o in outs]
+
+        # full mode: maintain the index, recount every query from scratch
+        ds2 = Dataset.from_graph(data)
+        m2 = Matcher(ds2, opts)
+        t0 = time.perf_counter()
+        for d in deltas:
+            ds2.apply_delta(d)
+            counts = [m2.count(q).count for q in queries]
+        dt_full = time.perf_counter() - t0
+
+        assert counts == delta_counts, \
+            f"{name}: delta-maintained counts diverged from full recount"
+        nq, nu = len(queries), len(deltas)
+        rows.append(bench_row(
+            f"delta.{name}.full", dt_full / nu,
+            f"count={sum(counts)};queries={nq};updates={nu}"))
+        rows.append(bench_row(
+            f"delta.{name}.delta", dt_delta / nu,
+            f"count={sum(counts)};queries={nq};updates={nu}"
+            f";created={created};destroyed={destroyed}"
+            f";fallbacks={fallbacks}"))
+    return rows
+
+
+def main() -> None:
+    from .run import parse_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_delta.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to PATH (default BENCH_delta.json)")
+    args = ap.parse_args()
+    rows = delta_vs_full(scale=0.08 if args.full else 0.03)
+    print("name,us_per_update,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.json:
+        from .common import bench_env
+        with open(args.json, "w") as f:
+            json.dump({"env": bench_env(), "rows": parse_rows(rows)}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,15 +17,23 @@ def fig7_total_time(scale=0.03, limit=20_000):
         queries = make_queries(data, sizes=(4, 6), per_size=3)
         for method in ["cemr", "basic", "vector"]:
             total, counts, compile_s = 0.0, 0, 0.0
+            res = None
             for _, q in queries:
                 c, dt, res = run_method(method, q, data, limit=limit)
                 total += dt
                 counts += c
                 compile_s += getattr(res, "compile_s", 0.0)
             nq = max(len(queries), 1)
+            # engine_used/graph_version from the MatchOutcome: the resolved
+            # engine (auto-selection observability) and the dataset version
+            # the numbers are valid for (streaming datasets)
+            prov = (f";engine={res.engine_used};gv={res.graph_version}"
+                    if res is not None and hasattr(res, "engine_used")
+                    else "")
             rows.append(bench_row(f"fig7.{name}.{method}", total / nq,
                                   f"emb={counts};"
-                                  f"compile_us={compile_s / nq * 1e6:.1f}"))
+                                  f"compile_us={compile_s / nq * 1e6:.1f}"
+                                  + prov))
     return rows
 
 

@@ -42,6 +42,13 @@ python -m benchmarks.batch_bench --json "$batch_json"
 echo "== batch smoke (batched/seq queries-per-second gate) =="
 python scripts/perf_smoke.py --batch "$batch_json" benchmarks/BENCH_batch.json
 
+echo "== delta bench (incremental maintenance vs full recount) =="
+delta_json="$(mktemp /tmp/BENCH_delta_new.XXXXXX.json)"
+python -m benchmarks.delta_bench --json "$delta_json"
+
+echo "== delta smoke (delta/full maintenance-cost gate) =="
+python scripts/perf_smoke.py --delta "$delta_json" benchmarks/BENCH_delta.json
+
 echo "== shard differential (4 forced host devices) =="
 # sharded == sequential == ref across the strategy workloads; runs in its
 # own process because the device count must be fixed before jax loads
@@ -63,4 +70,4 @@ echo "== docs: README quickstart executes =="
 python scripts/run_readme.py
 
 echo "== docs: public-surface docstring gate =="
-python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py
+python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming

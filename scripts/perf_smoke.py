@@ -8,6 +8,21 @@ Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --compile NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --batch NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --shard NEW.json [BASELINE.json]
+       python scripts/perf_smoke.py --delta NEW.json [BASELINE.json]
+
+Delta mode: both files are `benchmarks.delta_bench --json` outputs (rows
+delta.<ds>.full / delta.<ds>.delta — per-update cost of keeping standing
+counts current through a small-batch update stream, incrementally vs by
+full recount). The gated metric is the same-host ratio delta_us / full_us
+per dataset — machine-independent by construction. The gate: no dataset
+may regress past DELTA_REGRESS_MAX (incremental maintenance slower than
+recounting from scratch means the pinned enumeration stopped paying for
+itself), and the mean ratio over enumeration-heavy datasets must stay ≤
+1/DELTA_SPEEDUP_MIN (the ≥2x small-batch criterion; dblp and wordnet carry
+this mean at CI scale). Datasets whose full-recount row sits below
+DELTA_FLOOR_US per update are fixed-cost dominated (the recount itself is
+sub-ms) and are skipped; the committed-baseline ratio prints for context
+only.
 
 Shard mode: both files are `benchmarks.shard_bench --json` outputs (rows
 shard.<ds>.seq / shard.<ds>.sharded, produced under 4 forced host
@@ -90,6 +105,11 @@ SHARD_REGRESS_MAX = 1.25         # no dataset may run >25% slower sharded
 SHARD_FLOOR_US = 5000.0          # per-query; below this the workload is a
                                  # single-dispatch overhead measurement,
                                  # not enumeration-bound — no shard signal
+DELTA_SPEEDUP_MIN = 2.0          # mean speedup, incremental vs full recount
+DELTA_REGRESS_MAX = 1.0          # no dataset may maintain counts slower
+                                 # incrementally than by full recount
+DELTA_FLOOR_US = 5000.0          # per-update; below this the full recount
+                                 # is itself sub-ms and fixed-cost dominated
 
 
 def load(path: str) -> dict:
@@ -160,6 +180,56 @@ def shard_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
         out[ds] = (row["us_per_call"] / max(seq["us_per_call"], 1e-9),
                    row["us_per_call"], seq["us_per_call"])
     return out
+
+
+def delta_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
+    """dataset -> (delta/full ratio, delta us, full us)."""
+    out = {}
+    for name, row in rows.items():
+        parts = name.split(".")
+        if len(parts) != 3 or parts[0] != "delta" or parts[2] != "delta":
+            continue
+        ds = parts[1]
+        full = rows.get(f"delta.{ds}.full")
+        if not full:
+            continue
+        out[ds] = (row["us_per_call"] / max(full["us_per_call"], 1e-9),
+                   row["us_per_call"], full["us_per_call"])
+    return out
+
+
+def main_delta(new_path: str, base_path: str) -> int:
+    new = delta_ratios(load(new_path))
+    base = delta_ratios(load(base_path))
+    if not new:
+        print("perf-smoke: no delta.<ds>.full/delta row pairs found; "
+              "did benchmarks.delta_bench run with --json?")
+        return 2
+    failed = False
+    judged = []
+    for ds, (ratio, dlt_us, full_us) in sorted(new.items()):
+        ctx = (f" (baseline {base[ds][0]:.3f})" if ds in base else "")
+        if full_us < DELTA_FLOOR_US:
+            verdict = "ok (below noise floor)"
+        elif ratio > DELTA_REGRESS_MAX:
+            verdict = "FAIL (incremental slower than full recount)"
+            failed = True
+        else:
+            judged.append(ratio)
+            verdict = "ok"
+        print(f"perf-smoke: delta {ds}: delta/full {ratio:.3f} "
+              f"({full_us / max(dlt_us, 1e-9):.1f}x){ctx} {verdict}")
+    limit = 1.0 / DELTA_SPEEDUP_MIN
+    if not judged:
+        print("perf-smoke: delta MEAN: no dataset above noise floor; "
+              "mean gate skipped")
+        return 1 if failed else 0
+    mean = sum(judged) / len(judged)
+    mean_ok = mean <= limit
+    print(f"perf-smoke: delta MEAN: delta/full {mean:.3f} "
+          f"({1.0 / max(mean, 1e-9):.1f}x, limit {limit:.2f}) "
+          f"{'ok' if mean_ok else 'FAIL'}")
+    return 1 if (failed or not mean_ok) else 0
 
 
 def main_shard(new_path: str, base_path: str) -> int:
@@ -291,7 +361,7 @@ def main_compile(new_path: str, base_path: str) -> int:
 
 def main() -> int:
     args = [a for a in sys.argv[1:]
-            if a not in ("--compile", "--batch", "--shard")]
+            if a not in ("--compile", "--batch", "--shard", "--delta")]
     if not args:
         print(__doc__)
         return 2
@@ -304,6 +374,9 @@ def main() -> int:
     if "--shard" in sys.argv[1:]:
         return main_shard(args[0], args[1] if len(args) > 1 else
                           "benchmarks/BENCH_shard.json")
+    if "--delta" in sys.argv[1:]:
+        return main_delta(args[0], args[1] if len(args) > 1 else
+                          "benchmarks/BENCH_delta.json")
     new_path = args[0]
     base_path = args[1] if len(args) > 1 else \
         "benchmarks/BENCH_engine.json"

@@ -12,6 +12,8 @@ The legacy per-call entry points (`repro.core.cemr_match`,
 `repro.core.engine.vector_match`) remain as deprecated shims; see
 docs/api.md for the migration guide.
 """
+from repro.streaming import DeltaOutcome, DeltaSummary, GraphDelta
+
 from .dataset import Dataset
 from .matcher import (AUTO_VECTOR_MIN_ROWS, CacheInfo, CompiledQuery,
                       Matcher, MatchOutcome)
@@ -23,5 +25,5 @@ __all__ = [
     "Dataset", "Matcher", "MatchOptions", "MatchOutcome", "CompiledQuery",
     "CacheInfo", "graph_signature", "AUTO_VECTOR_MIN_ROWS",
     "ENGINES", "ENCODINGS", "ORDER_HEURISTICS", "INTERSECT_MODES",
-    "BATCH_MODES",
+    "BATCH_MODES", "GraphDelta", "DeltaSummary", "DeltaOutcome",
 ]

@@ -58,18 +58,30 @@ class MatchOutcome:
     compile_s: float = 0.0            # time this call spent compiling
                                       # (filtering + analysis + vector plan
                                       # build; ~0 on a plan-cache hit)
+    graph_version: int = 0            # Dataset.graph_version the count is
+                                      # valid for (streaming datasets)
+    engine_requested: str = ""        # the engine option as requested
+                                      # ("auto" observable vs. resolved)
+
+    @property
+    def engine_used(self) -> str:
+        """The resolved engine that actually ran ("ref" | "vector") —
+        alias of `engine`, named for auto-selection observability."""
+        return self.engine
 
 
 @dataclasses.dataclass(frozen=True)
 class CacheInfo:
     """Plan-cache counters returned by `Matcher.cache_info()` (hits/misses
     are cumulative for the Matcher's lifetime; size/maxsize describe the
-    LRU)."""
+    LRU; `carried` counts hits served by carrying a compiled plan across a
+    dataset version bump whose deltas provably couldn't affect it)."""
 
     hits: int
     misses: int
     size: int
     maxsize: int
+    carried: int = 0
 
 
 class CompiledQuery:
@@ -91,9 +103,12 @@ class CompiledQuery:
     @property
     def plan(self):
         """The vector-engine MatchingPlan (packed bitmap tables), built
-        lazily on first access and shared by every engine configuration."""
+        lazily on first access and shared by every engine configuration;
+        stamped with the dataset version its tables were packed against."""
         if self._plan is None:
-            self._plan = build_plan(self.cs, self.an)
+            self._plan = build_plan(
+                self.cs, self.an,
+                graph_version=self.dataset.graph_version)
         return self._plan
 
     def vector_engine(self, opts: MatchOptions, intersect_fn=None,
@@ -144,6 +159,9 @@ class CompiledQuery:
             f"query: |V|={self.query.n} |E|={self.query.n_edges} "
             f"signature={graph_signature(self.query)[:12]}",
             f"dataset: {self.dataset!r}",
+            f"graph_version: {self.dataset.graph_version}"
+            + (f" (plan packed at v{self._plan.graph_version})"
+               if self._plan is not None else ""),
             f"engine: {resolved}" + (" (auto)" if engine == "auto" else ""),
             f"encoding={self.options.encoding} "
             f"order_heuristic={self.options.order_heuristic} "
@@ -197,6 +215,15 @@ class Matcher:
         self._cache: OrderedDict[tuple, CompiledQuery] = OrderedDict()
         self._hits = 0
         self._misses = 0
+        self._carried = 0
+        # (query signature, plan_key) -> newest full cache key, so a compile
+        # after a dataset mutation can find the previous version's entry and
+        # try to carry it forward instead of recompiling
+        self._latest: dict[tuple, tuple] = {}
+        # query signature -> (graph_version, exact count): bases for
+        # count_delta / standing queries, seeded by exact count() calls
+        self._standing: OrderedDict[str, tuple[int, int]] = OrderedDict()
+        self._standing_max = 4 * plan_cache_size
         self._intersect_fn = intersect_fn
         # warm SuperbatchScheduler per (signature, plan identity, knobs):
         # repeated match_many workloads reuse stacked tables + CER buffers.
@@ -210,12 +237,15 @@ class Matcher:
     def cache_info(self) -> CacheInfo:
         """Plan-cache counters (cumulative hits/misses, current size)."""
         return CacheInfo(hits=self._hits, misses=self._misses,
-                         size=len(self._cache), maxsize=self._maxsize)
+                         size=len(self._cache), maxsize=self._maxsize,
+                         carried=self._carried)
 
     def clear_cache(self) -> None:
         """Drop every cached CompiledQuery and warm superbatch scheduler
         (hit/miss counters are preserved)."""
         self._cache.clear()
+        self._latest.clear()
+        self._standing.clear()
         # warm superbatch schedulers pin their bucket's plans plus stacked
         # device tables; clearing the plan cache must release those too
         self._batch_cache.clear()
@@ -242,14 +272,28 @@ class Matcher:
     def compile(self, query: Graph, options: MatchOptions | None = None,
                 **overrides) -> CompiledQuery:
         """Preprocess + analyze `query`, reusing the plan cache. The key is
-        (canonical query signature, plan-relevant options); runtime knobs
-        (engine, tile_rows, limit, ...) share one compiled entry."""
+        (canonical query signature, plan-relevant options, dataset content
+        signature, dataset graph_version); runtime knobs (engine, tile_rows,
+        limit, ...) share one compiled entry. Keying on dataset content +
+        version means a mutated — or merely lookalike — Dataset can never
+        be served a stale plan; after an `apply_delta` whose touched-vertex
+        labels are all disjoint from the query's labels, the previous
+        version's entry is carried forward (provably unaffected: every
+        candidate row and auxiliary CSR it holds reads only rows of
+        query-labeled vertices) and counted in `cache_info().carried`."""
         opts = self._resolve_options(options, overrides)
-        key = (graph_signature(query), opts.plan_key)
+        qsig = graph_signature(query)
+        key = (qsig, opts.plan_key, self.dataset.signature,
+               self.dataset.graph_version)
         cq = self._cache.get(key)
         if cq is not None:
             self._hits += 1
             self._cache.move_to_end(key)
+            return cq
+        cq = self._carry_forward(qsig, opts.plan_key, key, query)
+        if cq is not None:
+            self._hits += 1
+            self._carried += 1
             return cq
         self._misses += 1
         cs, an = preprocess(query, self.dataset.graph,
@@ -261,8 +305,37 @@ class Matcher:
                             index=self.dataset.index)
         cq = CompiledQuery(query, self.dataset, opts, cs, an)
         self._cache[key] = cq
+        self._latest[(qsig, opts.plan_key)] = key
         while len(self._cache) > self._maxsize:
             self._cache.popitem(last=False)
+        return cq
+
+    def _carry_forward(self, qsig: str, plan_key: tuple, new_key: tuple,
+                       query: Graph) -> CompiledQuery | None:
+        """Re-key a previous dataset version's CompiledQuery to the current
+        version when every intervening delta's touched-vertex labels are
+        disjoint from the query's vertex labels. Disjointness is the sound
+        criterion: candidate sets, NLF rows, and label-CSR rows consumed by
+        the compile all belong to query-labeled data vertices, which such
+        deltas by construction never touch (membership of touched vertices
+        in the final candidate sets would NOT be sound — an edge insert can
+        re-admit a refinement-pruned candidate)."""
+        old_key = self._latest.get((qsig, plan_key))
+        if old_key is None or old_key == new_key:
+            return None
+        cq = self._cache.get(old_key)
+        if cq is None or cq.dataset is not self.dataset:
+            return None
+        deltas = self.dataset.deltas_since(old_key[3])
+        if deltas is None:
+            return None
+        qlabels = set(int(l) for l in query.labels)
+        if any(not t.isdisjoint(qlabels) for t in deltas):
+            return None
+        del self._cache[old_key]
+        cq.cs.data = self.dataset.graph      # candidates/adjacency unchanged
+        self._cache[new_key] = cq
+        self._latest[(qsig, plan_key)] = new_key
         return cq
 
     # ---------------------------------------------------------------- execute
@@ -275,6 +348,7 @@ class Matcher:
         t0 = time.perf_counter()
         cq = self.compile(query, opts)
         cached = self._hits > hits_before
+        gv = self.dataset.graph_version
         engine = cq.resolve_engine(opts.engine)
         if engine == "vector" and not cq.empty:
             _ = cq.plan               # force the lazy plan build (bitmap
@@ -287,32 +361,52 @@ class Matcher:
             else:
                 from repro.core.engine import VectorStats
                 stats = VectorStats()
-            return MatchOutcome(count=0, engine=engine, elapsed_s=0.0,
-                                timed_out=False, stats=stats,
-                                embeddings=[] if opts.materialize else None,
-                                plan_cached=cached, compile_s=compile_s)
-        if engine == "ref":
+            out = MatchOutcome(count=0, engine=engine, elapsed_s=0.0,
+                               timed_out=False, stats=stats,
+                               embeddings=[] if opts.materialize else None,
+                               plan_cached=cached, compile_s=compile_s,
+                               graph_version=gv,
+                               engine_requested=opts.engine)
+        elif engine == "ref":
             res = cemr_match(query, self.dataset.graph,
                              preprocessed=(cq.cs, cq.an),
                              use_cer=opts.use_cer, use_cv=opts.use_cv,
                              use_fs=opts.use_fs, limit=opts.limit,
                              step_budget=opts.budget,
                              materialize=opts.materialize)
-            return MatchOutcome(count=res.count, engine="ref",
-                                elapsed_s=res.elapsed_s,
-                                timed_out=res.timed_out, stats=res.stats,
-                                embeddings=res.embeddings, plan_cached=cached,
-                                compile_s=compile_s)
-        eng = cq.vector_engine(opts, intersect_fn=self._intersect_fn,
-                               mesh=self._resolve_mesh(opts))
-        t0 = time.perf_counter()
-        res = eng.run(limit=opts.limit, max_steps=opts.budget,
-                      materialize=opts.materialize)
-        return MatchOutcome(count=res.count, engine="vector",
-                            elapsed_s=time.perf_counter() - t0,
-                            timed_out=res.timed_out, stats=res.stats,
-                            embeddings=res.embeddings, plan_cached=cached,
-                            compile_s=compile_s)
+            out = MatchOutcome(count=res.count, engine="ref",
+                               elapsed_s=res.elapsed_s,
+                               timed_out=res.timed_out, stats=res.stats,
+                               embeddings=res.embeddings, plan_cached=cached,
+                               compile_s=compile_s, graph_version=gv,
+                               engine_requested=opts.engine)
+        else:
+            eng = cq.vector_engine(opts, intersect_fn=self._intersect_fn,
+                                   mesh=self._resolve_mesh(opts))
+            t0 = time.perf_counter()
+            res = eng.run(limit=opts.limit, max_steps=opts.budget,
+                          materialize=opts.materialize)
+            out = MatchOutcome(count=res.count, engine="vector",
+                               elapsed_s=time.perf_counter() - t0,
+                               timed_out=res.timed_out, stats=res.stats,
+                               embeddings=res.embeddings, plan_cached=cached,
+                               compile_s=compile_s, graph_version=gv,
+                               engine_requested=opts.engine)
+        self._seed_standing(query, out, opts)
+        return out
+
+    def _seed_standing(self, query: Graph, out: MatchOutcome,
+                       opts: MatchOptions) -> None:
+        """Record an exact count as a count_delta base. Only counts that are
+        provably complete qualify (no timeout, under the embedding limit)
+        and only for the current dataset version."""
+        if (out.timed_out or out.count >= opts.limit
+                or out.graph_version != self.dataset.graph_version):
+            return
+        self._standing[graph_signature(query)] = (out.graph_version,
+                                                  out.count)
+        while len(self._standing) > self._standing_max:
+            self._standing.popitem(last=False)
 
     def stream(self, query: Graph, options: MatchOptions | None = None,
                **overrides) -> Iterator[dict[int, int]]:
@@ -405,7 +499,10 @@ class Matcher:
                 outcomes[i] = MatchOutcome(
                     count=c, engine="vector", elapsed_s=per_query_s,
                     timed_out=timed_out, stats=stats, plan_cached=cached,
-                    compile_s=compile_s)
+                    compile_s=compile_s,
+                    graph_version=self.dataset.graph_version,
+                    engine_requested=opts.engine)
+                self._seed_standing(queries[i], outcomes[i], opts)
         return outcomes
 
     def _superbatch_for(self, sig: tuple, cqs: list, opts: MatchOptions):
@@ -436,6 +533,84 @@ class Matcher:
         else:
             self._batch_cache.move_to_end(key)
         return sched
+
+    # ----------------------------------------------------------------- deltas
+    def count_delta(self, queries, delta, options: MatchOptions | None = None,
+                    **overrides):
+        """Apply `delta` to the Matcher's Dataset and roll the given
+        queries' counts forward through it (docs/streaming.md).
+
+        For each query with a known exact base count (seeded by a previous
+        `count`/`count_delta` on the current version), the new count is
+        computed by the delta identity — `base + created - destroyed`,
+        where both sides are pinned enumerations over only the delta's
+        edges (`repro.streaming.embeddings_touching`) — without a full
+        re-enumeration. A query with no usable base, or whose pinned
+        enumeration overflows `opts.delta_limit`, is recounted from scratch
+        (`fallback=True`). The Dataset is mutated exactly once (its
+        `graph_version` advances by 1) regardless of query count.
+
+        Accepts one Graph or a list; returns one DeltaOutcome or a list,
+        matching the input shape. Raises ValueError (dataset untouched) if
+        the delta fails validation.
+        """
+        from repro.streaming.delta import canonicalize_delta
+        from repro.streaming.standing import (DeltaOutcome, DeltaOverflow,
+                                              embeddings_touching)
+        single = isinstance(queries, Graph)
+        qs: list[Graph] = [queries] if single else list(queries)
+        opts = self._resolve_options(options, overrides)
+        ds = self.dataset
+        old_graph, old_index = ds.graph, ds.index
+        old_version = ds.graph_version
+        canon = canonicalize_delta(old_graph, delta)  # validate pre-mutation
+
+        t0s = [time.perf_counter()] * len(qs)
+        bases: list[int | None] = []
+        destroyed: list[int | None] = []
+        for i, q in enumerate(qs):
+            t0s[i] = time.perf_counter()
+            ent = self._standing.get(graph_signature(q))
+            base = ent[1] if ent is not None and ent[0] == old_version \
+                else None
+            d = None
+            if base is not None:
+                try:
+                    d = embeddings_touching(q, old_graph, old_index,
+                                            canon.del_pairs,
+                                            limit=opts.delta_limit)
+                except DeltaOverflow:
+                    d = None
+            bases.append(base)
+            destroyed.append(d)
+
+        ds.apply_delta(delta)
+        new_version = ds.graph_version
+
+        outcomes: list[DeltaOutcome] = []
+        for i, q in enumerate(qs):
+            created: int | None = None
+            if bases[i] is not None and destroyed[i] is not None:
+                try:
+                    created = embeddings_touching(q, ds.graph, ds.index,
+                                                  canon.ins_pairs,
+                                                  limit=opts.delta_limit)
+                except DeltaOverflow:
+                    created = None
+            if created is not None:
+                count = bases[i] + created - destroyed[i]
+                self._standing[graph_signature(q)] = (new_version, count)
+                outcomes.append(DeltaOutcome(
+                    count=count, created=created, destroyed=destroyed[i],
+                    graph_version=new_version, fallback=False,
+                    elapsed_s=time.perf_counter() - t0s[i]))
+            else:
+                out = self.count(q, opts)    # full recount on the new graph
+                outcomes.append(DeltaOutcome(
+                    count=out.count, created=None, destroyed=None,
+                    graph_version=new_version, fallback=True,
+                    elapsed_s=time.perf_counter() - t0s[i]))
+        return outcomes[0] if single else outcomes
 
     def explain(self, query: Graph, options: MatchOptions | None = None,
                 **overrides) -> str:

@@ -60,6 +60,9 @@ class MatchOptions:
                       1 fall back bit-identically to the single-device
                       path; see docs/engine.md §Sharded enumeration.
     limit           : stop after this many embeddings.
+    delta_limit     : cap on the embeddings a `Matcher.count_delta` pinned
+                      enumeration may visit per side (created/destroyed);
+                      overflowing falls back to a full recount.
     budget          : device/search step budget (`step_budget` of the ref
                       engine, `max_steps` = jitted dispatches of the vector
                       engine); None = no cap.
@@ -82,6 +85,7 @@ class MatchOptions:
     intersect: str = "auto"
     mesh: str | int | None = None
     limit: int = 1_000_000
+    delta_limit: int = 200_000
     budget: int | None = None
     refine_rounds: int = 3
     materialize: bool = False
@@ -117,6 +121,9 @@ class MatchOptions:
         if not isinstance(self.limit, int) or self.limit < 1:
             raise ValueError(f"limit must be a positive int, "
                              f"got {self.limit!r}")
+        if not isinstance(self.delta_limit, int) or self.delta_limit < 1:
+            raise ValueError(f"delta_limit must be a positive int, "
+                             f"got {self.delta_limit!r}")
         if self.budget is not None and (not isinstance(self.budget, int)
                                         or self.budget < 1):
             raise ValueError(f"budget must be None or a positive int, "

@@ -95,6 +95,15 @@ class DataGraphIndex:
                     self.in_lab_edge_labels)
         return self.lab_indptr, self.lab_indices, self.lab_edge_labels
 
+    def out_label_counts(self) -> np.ndarray:
+        """(n, width) per-(vertex, label) out-neighbor counts, recovered as
+        `np.diff` of the label-sorted CSR row pointers. For undirected
+        graphs these ARE the NLF histograms (`nbr_label_counts`) — the
+        invariant the streaming patch path (`repro.streaming.maintain`)
+        exploits to refresh NLF for free after splicing the label CSR, and
+        that the streaming differential tests assert."""
+        return np.diff(self.lab_indptr).reshape(self.data.n, self.width)
+
 
 def _label_sorted_csr(width: int, lab: np.ndarray, indptr: np.ndarray,
                       indices: np.ndarray, edge_labels: np.ndarray | None):

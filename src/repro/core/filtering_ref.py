@@ -15,7 +15,13 @@ round). Two roles:
     graphs;
   * cold-compile baseline: benchmarks/compile_bench.py measures the
     vectorized compiler's speedup against this cost profile, and
-    scripts/perf_smoke.py gates on the ratio.
+    scripts/perf_smoke.py gates on the ratio;
+  * streaming oracle leg: tests/test_streaming.py compiles candidate
+    spaces through this reference against incrementally-patched
+    DataGraphIndexes (`repro.streaming.maintain.apply_delta`), requiring
+    bit-identical output to a from-scratch index — the per-candidate loop
+    reads every index field through the public accessors, so it exercises
+    exactly the surfaces a bad patch would corrupt.
 """
 from __future__ import annotations
 

@@ -69,6 +69,15 @@ class MatchingPlan:
     leaf_singles: list[int]              # BM vertices alone in their label
     root_vertex: int
     root_words: int
+    graph_version: int = -1              # Dataset.graph_version the plan's
+                                         # tables were packed against (-1 =
+                                         # built outside the Dataset layer).
+                                         # Shape-keyed program caches
+                                         # (scheduler._PROGRAMS) are built
+                                         # from the signature alone and need
+                                         # no invalidation; this stamp makes
+                                         # plan provenance observable in
+                                         # explain() and the streaming tests.
 
 
 def _pow2ceil(n: int) -> int:
@@ -146,7 +155,8 @@ def _bitmap_from_positions(pos: np.ndarray, n_words: int) -> np.ndarray:
     return bm
 
 
-def build_plan(cs: CandidateSpace, an: QueryAnalysis) -> MatchingPlan:
+def build_plan(cs: CandidateSpace, an: QueryAnalysis, *,
+               graph_version: int = -1) -> MatchingPlan:
     q = cs.query
     n = q.n
     # ---- per-label spaces ----------------------------------------------------
@@ -283,4 +293,5 @@ def build_plan(cs: CandidateSpace, an: QueryAnalysis) -> MatchingPlan:
                         masks=masks, tables=tables, ops=ops,
                         idx_slots=idx_slots, leaf_groups=leaf_groups,
                         leaf_singles=leaf_singles, root_vertex=root,
-                        root_words=words[label_of[root]])
+                        root_words=words[label_of[root]],
+                        graph_version=graph_version)

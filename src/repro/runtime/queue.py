@@ -15,6 +15,11 @@ re-deriving the candidate space — `stats["cache_hits"]` counts those reuses.
 This module is runnable on one host (executors are in-process workers driving
 the same engines); the scheduling logic is the deliverable — the device
 placement underneath is jax's.
+
+Streaming (docs/streaming.md): `register_standing` pins a query whose count
+is rolled forward through every `apply_delta` by the delta identity instead
+of re-enumerated, and checkpoints record the dataset's `graph_version` so
+`restore()` can refuse counts taken against a graph that no longer exists.
 """
 from __future__ import annotations
 
@@ -27,7 +32,7 @@ from collections import deque
 from repro.api import BATCH_MODES, Dataset, Matcher, MatchOptions
 from repro.core.graph import Graph
 
-__all__ = ["QueryItem", "MatchQueueRuntime"]
+__all__ = ["QueryItem", "StandingQuery", "MatchQueueRuntime"]
 
 
 @dataclasses.dataclass
@@ -40,6 +45,21 @@ class QueryItem:
     done: bool = False
     count: int | None = None
     elapsed_s: float = 0.0
+
+
+@dataclasses.dataclass
+class StandingQuery:
+    """A continuously-maintained query: registered once, its count rolled
+    forward through every `apply_delta` via the delta identity (or a full
+    recount on fallback). `count`/`graph_version` always describe the live
+    dataset after the latest applied delta."""
+
+    standing_id: int
+    query: Graph
+    count: int
+    graph_version: int
+    deltas_seen: int = 0
+    fallbacks: int = 0
 
 
 class MatchQueueRuntime:
@@ -63,8 +83,11 @@ class MatchQueueRuntime:
         self.state_path = state_path
         self.pending: deque[QueryItem] = deque()
         self.results: dict[int, QueryItem] = {}
+        self.standing: dict[int, StandingQuery] = {}
+        self._next_standing_id = 0
         self.stats = {"reissued": 0, "failed": 0, "completed": 0,
-                      "checkpoints": 0, "cache_hits": 0}
+                      "checkpoints": 0, "cache_hits": 0,
+                      "deltas_applied": 0, "delta_fallbacks": 0}
 
     def submit(self, queries: list[Graph], *, limit: int = 1_000_000,
                max_steps: int | None = 50_000) -> None:
@@ -209,13 +232,66 @@ class MatchQueueRuntime:
             self.results[item.query_id] = item
             self.stats["failed"] += 1
 
+    # --------------------------------------------------------- standing queries
+    def register_standing(self, query: Graph, *,
+                          limit: int = 1_000_000) -> int:
+        """Register a standing query: counted exactly once now, then rolled
+        forward by every subsequent `apply_delta`. Returns the standing id
+        (key into `self.standing`). Raises ValueError if the initial count
+        is inexact (timed out / hit `limit`) — a standing count must be a
+        sound delta base."""
+        out = self.matcher.count(query, limit=limit)
+        if out.timed_out or out.count >= limit:
+            raise ValueError(
+                "standing query's initial count is inexact (timed out or "
+                "hit the limit); raise `limit` or simplify the query")
+        sid = self._next_standing_id
+        self._next_standing_id += 1
+        self.standing[sid] = StandingQuery(
+            standing_id=sid, query=query, count=out.count,
+            graph_version=out.graph_version)
+        return sid
+
+    def apply_delta(self, delta) -> dict[int, object]:
+        """Apply one GraphDelta to the shared Dataset and roll every
+        standing query's count forward (`Matcher.count_delta`: pinned
+        delta enumeration, full recount on fallback). Returns
+        {standing_id: DeltaOutcome}. With no standing queries the dataset
+        still advances one version."""
+        sids = sorted(self.standing)
+        if not sids:
+            self.dataset.apply_delta(delta)
+            self.stats["deltas_applied"] += 1
+            return {}
+        outs = self.matcher.count_delta(
+            [self.standing[s].query for s in sids], delta)
+        self.stats["deltas_applied"] += 1
+        result = {}
+        for sid, out in zip(sids, outs):
+            sq = self.standing[sid]
+            sq.count = out.count
+            sq.graph_version = out.graph_version
+            sq.deltas_seen += 1
+            if out.fallback:
+                sq.fallbacks += 1
+                self.stats["delta_fallbacks"] += 1
+            result[sid] = out
+        return result
+
     # ------------------------------------------------------------- checkpoint
     def checkpoint(self) -> None:
+        """Persist queue results, pending ids, standing-query counts, and
+        the dataset's graph_version (restore() refuses a checkpoint taken
+        against a different version — those counts are stale)."""
         if not self.state_path:
             return
         state = {
             "results": {str(i): r.count for i, r in self.results.items()},
             "pending": [r.query_id for r in self.pending],
+            "graph_version": self.dataset.graph_version,
+            "standing": {str(s): {"count": sq.count,
+                                  "graph_version": sq.graph_version}
+                         for s, sq in self.standing.items()},
         }
         tmp = self.state_path + ".tmp"
         with open(tmp, "w") as f:
@@ -229,11 +305,24 @@ class MatchQueueRuntime:
         `pending` and their counts seeded into `results`, so a
         subsequent `run()` (batched or not) never recounts them. Call after
         re-`submit()`ing the same workload. Returns the raw checkpoint state
-        (or None when there is no checkpoint)."""
+        (or None when there is no checkpoint).
+
+        A checkpoint whose recorded `graph_version` differs from the live
+        dataset's is rejected with ValueError instead of silently re-serving
+        stale counts — every count in it was taken against a graph that no
+        longer exists. (Checkpoints from before the streaming subsystem
+        carry no version and are accepted as version 0.)"""
         if not self.state_path or not os.path.exists(self.state_path):
             return None
         with open(self.state_path) as f:
             state = json.load(f)
+        ckpt_version = int(state.get("graph_version", 0))
+        if ckpt_version != self.dataset.graph_version:
+            raise ValueError(
+                f"checkpoint was taken at graph_version {ckpt_version} but "
+                f"the live dataset is at {self.dataset.graph_version}; its "
+                f"counts are stale — re-run the workload instead of "
+                f"restoring")
         completed = {int(i): c for i, c in state.get("results", {}).items()
                      if c is not None}
         if completed:
@@ -246,4 +335,9 @@ class MatchQueueRuntime:
                 else:
                     still_pending.append(item)
             self.pending = still_pending
+        for sid, sq in self.standing.items():
+            rec = state.get("standing", {}).get(str(sid))
+            if rec is not None and rec["graph_version"] == ckpt_version:
+                sq.count = rec["count"]
+                sq.graph_version = rec["graph_version"]
         return state

@@ -19,6 +19,8 @@ Hypothesis (available when `HAS_HYPOTHESIS`):
   graph_regime()       — (seed, directed, n_edge_labels, qsize) regimes
   workload_regime()    — (seed, n_queries, dup, qsize, tile_rows, slots)
                          regimes for batched-vs-sequential differentials
+  delta_regime()       — (seed, directed, n_edge_labels, n_deltas, op mix)
+                         regimes for streaming apply_delta differentials
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ import numpy as np
 
 from repro.core.graph import (build_graph, random_walk_query,
                               synthetic_labeled_graph)
+from repro.streaming import random_delta
 
 try:
     from hypothesis import strategies as st
@@ -35,8 +38,8 @@ except ImportError:                                        # pragma: no cover
     HAS_HYPOTHESIS = False
 
 __all__ = ["fig1_pair", "random_pair", "brother_workload", "batch_workload",
-           "HAS_HYPOTHESIS", "small_graph_pair", "graph_regime",
-           "workload_regime"]
+           "delta_workload", "HAS_HYPOTHESIS", "small_graph_pair",
+           "graph_regime", "workload_regime", "delta_regime"]
 
 
 # ------------------------------------------------------------- deterministic
@@ -126,6 +129,34 @@ def batch_workload(seed=0, *, n=300, deg=6.0, n_labels=3, n_queries=8,
     return data, queries
 
 
+def delta_workload(seed=0, *, n=80, deg=5.0, n_labels=3, directed=False,
+                   n_edge_labels=None, n_deltas=3, qsize=4,
+                   edge_ops=4, vertex_ops=1):
+    """Streaming differential fixture: one data graph, one query sampled
+    from it, and a sequence of `n_deltas` valid random GraphDeltas (each
+    generated against the graph as it stands after the previous ones, so
+    the whole sequence can be applied in order). Returns
+    (data, query_or_None, deltas)."""
+    data = synthetic_labeled_graph(n, deg, n_labels, seed=seed,
+                                   directed=directed,
+                                   n_edge_labels=n_edge_labels)
+    try:
+        query = random_walk_query(data, qsize, seed=seed ^ 0x3C3C)
+    except RuntimeError:
+        query = None
+    from repro.streaming import apply_delta_reference
+    deltas = []
+    g = data
+    for k in range(n_deltas):
+        d = random_delta(g, seed * 101 + k, n_edge_inserts=edge_ops,
+                         n_edge_deletes=edge_ops,
+                         n_vertex_inserts=vertex_ops,
+                         n_vertex_deletes=vertex_ops)
+        deltas.append(d)
+        g = apply_delta_reference(g, d)
+    return data, query, deltas
+
+
 # ------------------------------------------------------------- hypothesis
 if HAS_HYPOTHESIS:
     @st.composite
@@ -159,6 +190,19 @@ if HAS_HYPOTHESIS:
         return seed, directed, n_el, qsize
 
     @st.composite
+    def delta_regime(draw):
+        """Knobs for one streaming apply_delta differential run
+        (insert/delete mixes across undirected / directed / edge-labeled
+        graphs; feeds `delta_workload`)."""
+        seed = draw(st.integers(0, 2**20 - 1))
+        directed = draw(st.booleans())
+        n_el = draw(st.sampled_from([None, 2]))
+        n_deltas = draw(st.integers(1, 4))
+        edge_ops = draw(st.integers(0, 6))
+        vertex_ops = draw(st.integers(0, 2))
+        return seed, directed, n_el, n_deltas, edge_ops, vertex_ops
+
+    @st.composite
     def workload_regime(draw):
         """Knobs for a batched-vs-sequential differential run."""
         seed = draw(st.integers(0, 2**15 - 1))
@@ -174,3 +218,4 @@ else:                                                      # pragma: no cover
         raise RuntimeError("hypothesis is not installed")
 
     small_graph_pair = graph_regime = workload_regime = _needs_hypothesis
+    delta_regime = _needs_hypothesis

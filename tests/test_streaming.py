@@ -1,0 +1,466 @@
+"""Streaming-delta subsystem tests (docs/streaming.md).
+
+Differential core: `apply_delta` (incremental patch) must be bit-identical
+to the rebuild-from-scratch oracle on every Graph/DataGraphIndex array, both
+candidate-space compilers must produce identical output against a patched
+index, and `Matcher.count_delta` must agree with a full recount on both
+engines. Plus: GraphDelta validation, plan-cache versioning/carry-forward,
+MatchOutcome observability fields, standing queries on the queue runtime,
+and the checkpoint graph_version gate.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import Dataset, GraphDelta, Matcher
+from repro.core.filtering import (build_candidate_space, build_data_index)
+from repro.core.filtering_ref import build_candidate_space_reference
+from repro.core.graph import build_graph
+from repro.core.ref_engine import cemr_match
+from repro.runtime.queue import MatchQueueRuntime
+from repro.streaming import (DeltaOverflow, apply_delta,
+                             apply_delta_reference, random_delta)
+from repro.streaming.delta import canonicalize_delta
+from repro.streaming.standing import embeddings_touching
+from strategies import delta_workload
+
+GRAPH_FIELDS = ("labels", "indptr", "indices", "edge_labels",
+                "in_indptr", "in_indices", "in_edge_labels")
+INDEX_FIELDS = ("deg_out", "deg_in", "nbr_label_counts", "lab_indptr",
+                "lab_indices", "lab_edge_labels", "in_lab_indptr",
+                "in_lab_indices", "in_lab_edge_labels")
+
+
+def eq(a, b):
+    """Bit-identity for optional arrays: same presence, dtype, shape, data."""
+    if a is None or b is None:
+        return (a is None) == (b is None)
+    return a.dtype == b.dtype and a.shape == b.shape and np.array_equal(a, b)
+
+
+def assert_state_identical(got, want, *, ctx=""):
+    """(graph, index) bit-identity across every field the engines read."""
+    g_got, i_got = got
+    g_want, i_want = want
+    for f in GRAPH_FIELDS:
+        assert eq(getattr(g_got, f), getattr(g_want, f)), f"{ctx} graph.{f}"
+    assert g_got.n_labels == g_want.n_labels
+    assert g_got.directed == g_want.directed
+    for f in INDEX_FIELDS:
+        assert eq(getattr(i_got, f), getattr(i_want, f)), f"{ctx} index.{f}"
+    assert set(i_got.by_label) == set(i_want.by_label), ctx
+    for lbl, bucket in i_want.by_label.items():
+        assert eq(i_got.by_label[lbl], bucket), f"{ctx} by_label[{lbl}]"
+    assert eq(i_got.out_label_counts(), i_want.out_label_counts()), ctx
+
+
+def assert_cs_identical(a, b, *, ctx=""):
+    assert len(a.cand) == len(b.cand)
+    for u in range(len(a.cand)):
+        assert eq(a.cand[u], b.cand[u]), f"{ctx} cand[{u}]"
+    assert set(a.adj_indptr) == set(b.adj_indptr), ctx
+    for k in a.adj_indptr:
+        assert eq(a.adj_indptr[k], b.adj_indptr[k]), f"{ctx} indptr{k}"
+        assert eq(a.adj_indices[k], b.adj_indices[k]), f"{ctx} indices{k}"
+
+
+# ------------------------------------------------------------- validation
+
+def _square():
+    return build_graph(4, [(0, 1), (1, 2), (2, 3), (3, 0)], [0, 1, 0, 1])
+
+
+@pytest.mark.parametrize("delta,msg", [
+    (GraphDelta(edge_inserts=[(0, 0)]), "self loop"),
+    (GraphDelta(edge_deletes=[(0, 2)]), "absent edge"),
+    (GraphDelta(edge_inserts=[(0, 1)]), "existing edge"),
+    (GraphDelta(edge_inserts=[(0, 2), (2, 0)]), "duplicate edge"),
+    (GraphDelta(edge_deletes=[(0, 1), (1, 0)]), "duplicate edge"),
+    (GraphDelta(edge_inserts=[(0, 2)], edge_deletes=[(0, 2)]),
+     "appears in both"),
+    (GraphDelta(edge_inserts=[(0, 9)]), "endpoints"),
+    (GraphDelta(vertex_deletes=[7]), "ids must lie"),
+    (GraphDelta(vertex_deletes=[1, 1]), "duplicate ids"),
+    (GraphDelta(vertex_inserts=[5]), "labels must lie"),
+    (GraphDelta(edge_inserts=[(0, 2)], vertex_deletes=[2]),
+     "deleted by this delta"),
+    (GraphDelta(edge_inserts=[(0, 2)], edge_insert_labels=[1]),
+     "no edge labels"),
+])
+def test_validation_rejects(delta, msg):
+    with pytest.raises(ValueError, match=msg):
+        canonicalize_delta(_square(), delta)
+
+
+def test_validation_edge_labeled():
+    g = build_graph(4, [(0, 1), (1, 2), (2, 3), (3, 0)], [0, 1, 0, 1],
+                    edge_labels=[0, 1, 0, 1])
+    with pytest.raises(ValueError, match="edge_insert_labels is required"):
+        canonicalize_delta(g, GraphDelta(edge_inserts=[(0, 2)]))
+    with pytest.raises(ValueError, match="entries for"):
+        canonicalize_delta(g, GraphDelta(edge_inserts=[(0, 2)],
+                                         edge_insert_labels=[0, 1]))
+    # well-formed passes and inserts are usable
+    g2 = apply_delta_reference(g, GraphDelta(edge_inserts=[(0, 2)],
+                                             edge_insert_labels=[1]))
+    assert g2.has_edge(0, 2) and g2.edge_label_of(0, 2) == 1
+
+
+def test_delta_repr_and_size():
+    d = GraphDelta(edge_inserts=[(0, 2)], vertex_inserts=[1])
+    assert d.size == 2 and not d.is_empty
+    assert "+e=1" in repr(d) and "+v=1" in repr(d)
+    assert GraphDelta().is_empty
+
+
+def test_new_vertices_usable_in_same_delta():
+    g = _square()
+    d = GraphDelta(vertex_inserts=[0, 1], edge_inserts=[(0, 4), (4, 5)])
+    idx = build_data_index(g)
+    g2, idx2, summary = apply_delta(g, idx, d, force="patch")
+    assert g2.n == 6 and g2.has_edge(0, 4) and g2.has_edge(4, 5)
+    assert_state_identical(
+        (g2, idx2),
+        (apply_delta_reference(g, d),
+         build_data_index(apply_delta_reference(g, d))), ctx="new-vertex")
+
+
+def test_vertex_delete_keeps_isolated_id():
+    g = _square()
+    idx = build_data_index(g)
+    g2, idx2, _ = apply_delta(g, idx, GraphDelta(vertex_deletes=[2]))
+    assert g2.n == 4                        # id survives, isolated
+    assert g2.degree(2) == 0
+    assert g2.labels[2] == g.labels[2]
+
+
+# ------------------------------------------------------- patch == rebuild
+
+@pytest.mark.parametrize("directed", [False, True])
+@pytest.mark.parametrize("n_el", [None, 2])
+def test_apply_delta_matches_rebuild(directed, n_el):
+    for seed in range(8):
+        data, _, deltas = delta_workload(seed, directed=directed,
+                                         n_edge_labels=n_el, n_deltas=3)
+        g, idx = data, build_data_index(data)
+        for k, d in enumerate(deltas):
+            want_g = apply_delta_reference(g, d)
+            want = (want_g, build_data_index(want_g))
+            got_p = apply_delta(g, idx, d, force="patch")[:2]
+            got_r = apply_delta(g, idx, d, force="rebuild")[:2]
+            ctx = f"seed={seed} k={k} dir={directed} el={n_el}"
+            assert_state_identical(got_p, want, ctx=ctx + " patch")
+            assert_state_identical(got_r, want, ctx=ctx + " rebuild")
+            g, idx = got_p
+
+
+def test_dirtiness_threshold_selects_path():
+    g = _square()
+    idx = build_data_index(g)
+    d = GraphDelta(edge_inserts=[(0, 2)])
+    # the delta touches 2 of 4 vertices: dirtiness 0.5
+    s_patch = apply_delta(g, idx, d, rebuild_fraction=0.9)[2]
+    s_rebuild = apply_delta(g, idx, d, rebuild_fraction=0.1)[2]
+    assert not s_patch.rebuilt and s_rebuild.rebuilt
+    assert s_patch.dirtiness == pytest.approx(0.5)
+    assert s_patch.touched_labels == frozenset({0})
+    with pytest.raises(ValueError, match="force must be one of"):
+        apply_delta(g, idx, d, force="bogus")
+
+
+def test_empty_delta_roundtrip():
+    g = _square()
+    idx = build_data_index(g)
+    g2, idx2, s = apply_delta(g, idx, GraphDelta())
+    assert s.size == 0 and s.n_touched == 0
+    assert_state_identical((g2, idx2), (g, idx), ctx="empty")
+
+
+# --------------------------------------------- candidate-space differential
+
+@pytest.mark.parametrize("directed", [False, True])
+def test_candidate_space_parity_on_patched_index(directed):
+    for seed in range(6):
+        data, query, deltas = delta_workload(seed, directed=directed,
+                                             n_deltas=2)
+        if query is None:
+            continue
+        g, idx = data, build_data_index(data)
+        for d in deltas:
+            g, idx, _ = apply_delta(g, idx, d, force="patch")
+        fresh = build_data_index(g)
+        cs_patched = build_candidate_space(query, g, index=idx)
+        cs_fresh = build_candidate_space(query, g, index=fresh)
+        cs_ref = build_candidate_space_reference(query, g, index=idx)
+        assert_cs_identical(cs_patched, cs_fresh, ctx=f"seed={seed} vec")
+        assert_cs_identical(cs_ref, cs_fresh, ctx=f"seed={seed} ref")
+
+
+# ------------------------------------------------------- delta enumeration
+
+def test_embeddings_touching_overflow():
+    data, query, deltas = delta_workload(1, n_deltas=1)
+    c = canonicalize_delta(data, deltas[0])
+    idx = build_data_index(data)
+    n = embeddings_touching(query, data, idx, c.del_pairs, limit=10**6)
+    if n > 1:
+        with pytest.raises(DeltaOverflow):
+            embeddings_touching(query, data, idx, c.del_pairs, limit=1)
+
+
+def test_created_destroyed_match_materialized_sets():
+    for seed in range(5):
+        data, query, deltas = delta_workload(seed, n=50, n_deltas=1,
+                                             edge_ops=5, vertex_ops=0)
+        if query is None:
+            continue
+        d = deltas[0]
+        c = canonicalize_delta(data, d)
+        idx = build_data_index(data)
+        before = cemr_match(query, data, materialize=True).embeddings
+        g2 = apply_delta_reference(data, d)
+        idx2 = build_data_index(g2)
+        after = cemr_match(query, g2, materialize=True).embeddings
+        key = lambda e: tuple(e[u] for u in sorted(e))
+        a, b = {key(e) for e in before}, {key(e) for e in after}
+        destroyed = embeddings_touching(query, data, idx, c.del_pairs,
+                                        limit=10**6)
+        created = embeddings_touching(query, g2, idx2, c.ins_pairs,
+                                      limit=10**6)
+        assert destroyed == len(a - b), f"seed={seed} destroyed"
+        assert created == len(b - a), f"seed={seed} created"
+
+
+# ------------------------------------------------------------ Matcher layer
+
+@pytest.mark.parametrize("engine", ["ref", "vector"])
+def test_count_delta_matches_full_recount(engine):
+    ds = Dataset.random(200, 6.0, 3, seed=4)
+    m = Matcher(ds, plan_cache_size=16)
+    q = ds.random_query(4, seed=21)
+    m.count(q, engine=engine)               # seed the standing base
+    for k in range(3):
+        d = random_delta(ds.graph, 500 + k, n_edge_inserts=4,
+                         n_edge_deletes=4, n_vertex_inserts=1)
+        out = m.count_delta(q, d, engine=engine)
+        fresh = Matcher(Dataset.from_graph(ds.graph))
+        assert out.count == fresh.count(q, engine="ref").count, f"k={k}"
+        assert out.graph_version == ds.graph_version
+        if not out.fallback:
+            assert out.created is not None and out.destroyed is not None
+
+
+def test_count_delta_list_and_fallback():
+    ds = Dataset.random(150, 5.0, 3, seed=8)
+    m = Matcher(ds)
+    q1, q2 = ds.random_query(4, seed=1), ds.random_query(5, seed=2)
+    m.count(q1)                             # q1 has a base; q2 does not
+    d = random_delta(ds.graph, 77, n_edge_inserts=3, n_edge_deletes=3)
+    outs = m.count_delta([q1, q2], d)
+    assert len(outs) == 2
+    assert outs[1].fallback                 # no base -> full recount
+    fresh = Matcher(Dataset.from_graph(ds.graph))
+    assert outs[0].count == fresh.count(q1).count
+    assert outs[1].count == fresh.count(q2).count
+
+
+def test_count_delta_overflow_falls_back():
+    # square, all label 0; the single-edge query has 8 embeddings, so any
+    # edge delete destroys >= 2 of them: delta_limit=1 must overflow the
+    # pinned enumeration and trigger the full-recount fallback
+    g = build_graph(4, [(0, 1), (1, 2), (2, 3), (3, 0)], [0, 0, 0, 0])
+    ds = Dataset.from_graph(g)
+    m = Matcher(ds)
+    q = build_graph(2, [(0, 1)], [0, 0])
+    assert m.count(q, engine="ref").count == 8
+    out = m.count_delta(q, GraphDelta(edge_deletes=[(0, 1)]), delta_limit=1)
+    assert out.fallback and out.created is None and out.destroyed is None
+    assert out.count == 6
+    # with headroom the identity path runs and reports the per-edge churn
+    out = m.count_delta(q, GraphDelta(edge_inserts=[(0, 1)]))
+    assert not out.fallback
+    assert out.count == 8 and out.created == 2 and out.destroyed == 0
+
+
+def test_invalid_delta_leaves_dataset_untouched():
+    ds = Dataset.random(60, 4.0, 2, seed=0)
+    m = Matcher(ds)
+    sig = ds.signature
+    with pytest.raises(ValueError):
+        m.count_delta(ds.random_query(3, seed=0),
+                      GraphDelta(edge_inserts=[(0, 0)]))
+    assert ds.graph_version == 0 and ds.signature == sig
+
+
+def test_plan_cache_never_serves_stale_plan():
+    ds = Dataset.random(120, 5.0, 3, seed=6)
+    m = Matcher(ds)
+    q = ds.random_query(4, seed=3)
+    m.count(q)
+    ds.apply_delta(random_delta(ds.graph, 11, n_edge_inserts=5,
+                                n_edge_deletes=5))
+    out = m.count(q)
+    fresh = Matcher(Dataset.from_graph(ds.graph))
+    assert out.count == fresh.count(q).count
+    assert out.graph_version == 1
+
+
+def test_carry_forward_label_disjoint_delta():
+    # labels 0/1 form a path the query lives on; label-2 vertices are a
+    # separate clique the delta edits — provably irrelevant to the query
+    labels = [0, 1, 0, 1, 2, 2, 2]
+    g = build_graph(7, [(0, 1), (1, 2), (2, 3), (4, 5), (5, 6)], labels)
+    ds = Dataset.from_graph(g)
+    m = Matcher(ds)
+    q = build_graph(3, [(0, 1), (1, 2)], [0, 1, 0])
+    base = m.count(q).count
+    assert m.cache_info().misses == 1
+    ds.apply_delta(GraphDelta(edge_inserts=[(4, 6)]))       # label 2 only
+    out = m.count(q)
+    ci = m.cache_info()
+    assert out.count == base
+    assert ci.carried == 1 and ci.misses == 1               # no recompile
+    # a delta touching a query label forces a real recompile
+    ds.apply_delta(GraphDelta(edge_deletes=[(2, 3)]))       # labels 0,1
+    m.count(q)
+    ci = m.cache_info()
+    assert ci.carried == 1 and ci.misses == 2
+
+
+def test_reverted_content_not_aliased_across_versions():
+    # satellite: cache keys carry (content signature, graph_version). An
+    # insert followed by its inverse delete restores the exact original
+    # content (same signature) at a higher version — the lookalike must not
+    # alias onto the v0 entry, and counts must stay correct throughout.
+    ds = Dataset.random(80, 4.0, 2, seed=9)
+    m = Matcher(ds)
+    q = ds.random_query(3, seed=4)
+    base = m.count(q).count
+    sig0 = ds.signature
+    d = random_delta(ds.graph, 13, n_edge_inserts=1, n_edge_deletes=0)
+    assert d.edge_inserts.shape[0] == 1
+    ds.apply_delta(d)
+    mid = m.count(q)
+    ds.apply_delta(GraphDelta(edge_deletes=d.edge_inserts))
+    assert ds.signature == sig0 and ds.graph_version == 2
+    out = m.count(q)
+    assert out.count == base and out.graph_version == 2
+    assert mid.count == Matcher(
+        Dataset.from_graph(apply_delta_reference(ds.graph, d))).count(q).count
+
+
+def test_match_outcome_surface_fields():
+    ds = Dataset.random(100, 4.0, 2, seed=2)
+    m = Matcher(ds)
+    q = ds.random_query(3, seed=7)
+    out = m.count(q)
+    assert out.engine_used == out.engine
+    assert out.engine_requested == "auto"
+    assert out.graph_version == 0
+    out = m.count(q, engine="ref")
+    assert out.engine_requested == "ref" and out.engine_used == "ref"
+    outs = m.match_many([q, q])
+    assert all(o.engine_requested == "auto" for o in outs)
+    assert all(o.graph_version == 0 for o in outs)
+
+
+def test_plan_version_stamp_in_explain():
+    ds = Dataset.random(400, 8.0, 2, seed=5)
+    m = Matcher(ds)
+    q = ds.random_query(4, seed=6)
+    cq = m.compile(q)
+    assert cq.plan.graph_version == 0
+    assert "graph_version: 0 (plan packed at v0)" in m.explain(q)
+
+
+def test_deltas_since_log_semantics():
+    ds = Dataset.random(60, 4.0, 2, seed=1)
+    assert ds.deltas_since(0) == []
+    assert ds.deltas_since(5) is None       # future version unknown
+    for k in range(3):
+        ds.apply_delta(random_delta(ds.graph, k, n_edge_inserts=2,
+                                    n_edge_deletes=2))
+    assert len(ds.deltas_since(0)) == 3
+    assert len(ds.deltas_since(2)) == 1
+    assert ds.deltas_since(-1) is None      # predates the log
+
+
+# -------------------------------------------------------------- queue layer
+
+def test_queue_standing_parity(tmp_path):
+    ds = Dataset.random(200, 5.0, 3, seed=12)
+    rt = MatchQueueRuntime(ds, engine="ref",
+                           state_path=str(tmp_path / "q.json"))
+    q = ds.random_query(4, seed=8)
+    sid = rt.register_standing(q)
+    for k in range(3):
+        d = random_delta(ds.graph, 300 + k, n_edge_inserts=3,
+                         n_edge_deletes=3)
+        outs = rt.apply_delta(d)
+        assert outs[sid].graph_version == ds.graph_version
+    fresh = Matcher(Dataset.from_graph(ds.graph))
+    assert rt.standing[sid].count == fresh.count(q, engine="ref").count
+    assert rt.standing[sid].deltas_seen == 3
+    assert rt.stats["deltas_applied"] == 3
+
+
+def test_queue_restore_rejects_version_mismatch(tmp_path):
+    ds = Dataset.random(100, 4.0, 2, seed=3)
+    sp = str(tmp_path / "q.json")
+    rt = MatchQueueRuntime(ds, engine="ref", state_path=sp)
+    rt.submit([ds.random_query(3, seed=1)])
+    rt.run()
+    rt.checkpoint()
+    assert rt.restore() is not None         # same version: fine
+    ds.apply_delta(random_delta(ds.graph, 42, n_edge_inserts=2,
+                                n_edge_deletes=2))
+    with pytest.raises(ValueError, match="graph_version"):
+        rt.restore()
+
+
+def test_queue_restore_accepts_legacy_checkpoint(tmp_path):
+    ds = Dataset.random(100, 4.0, 2, seed=3)
+    sp = str(tmp_path / "q.json")
+    rt = MatchQueueRuntime(ds, engine="ref", state_path=sp)
+    with open(sp, "w") as f:                # pre-streaming checkpoint shape
+        json.dump({"results": {"0": 17}, "pending": []}, f)
+    rt.submit([ds.random_query(3, seed=1)])
+    state = rt.restore()                    # version-less == version 0
+    assert state["results"]["0"] == 17
+    assert rt.results[0].count == 17
+
+
+# ---------------------------------------------------------------- hypothesis
+# Guarded import (not module-level importorskip) so the deterministic tests
+# above still run on hosts without hypothesis.
+try:
+    from hypothesis import given, settings
+except ImportError:                                        # pragma: no cover
+    given = None
+
+if given is not None:
+    from strategies import delta_regime
+
+    @pytest.mark.tier2
+    @settings(max_examples=25, deadline=None)
+    @given(delta_regime())
+    def test_streaming_differential_property(regime):
+        seed, directed, n_el, n_deltas, edge_ops, vertex_ops = regime
+        data, query, deltas = delta_workload(
+            seed, directed=directed, n_edge_labels=n_el,
+            n_deltas=n_deltas, edge_ops=edge_ops, vertex_ops=vertex_ops)
+        g, idx = data, build_data_index(data)
+        for d in deltas:
+            want_g = apply_delta_reference(g, d)
+            got = apply_delta(g, idx, d, force="patch")[:2]
+            assert_state_identical(got, (want_g, build_data_index(want_g)))
+            g, idx = got
+        if query is None:
+            return
+        # candidate spaces and counts off the final patched index
+        fresh = build_data_index(g)
+        assert_cs_identical(build_candidate_space(query, g, index=idx),
+                            build_candidate_space(query, g, index=fresh))
+        assert (cemr_match(query, g).count
+                == Matcher(Dataset.from_graph(g)).count(query).count)
