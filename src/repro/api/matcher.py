@@ -26,6 +26,8 @@ import time
 from collections import OrderedDict
 from typing import Iterator
 
+import numpy as np
+
 from repro.core.encoding import BLACK, QueryAnalysis
 from repro.core.filtering import CandidateSpace
 from repro.core.graph import Graph
@@ -307,7 +309,12 @@ class Matcher:
         self._cache[key] = cq
         self._latest[(qsig, opts.plan_key)] = key
         while len(self._cache) > self._maxsize:
-            self._cache.popitem(last=False)
+            evicted, _ = self._cache.popitem(last=False)
+            # keep _latest in lockstep with the LRU: a pointer to an
+            # evicted entry can never be carried forward, and leaving it
+            # would grow _latest without bound across distinct queries
+            if self._latest.get((evicted[0], evicted[1])) == evicted:
+                del self._latest[(evicted[0], evicted[1])]
         return cq
 
     def _carry_forward(self, qsig: str, plan_key: tuple, new_key: tuple,
@@ -547,8 +554,15 @@ class Matcher:
         edges (`repro.streaming.embeddings_touching`) — without a full
         re-enumeration. A query with no usable base, or whose pinned
         enumeration overflows `opts.delta_limit`, is recounted from scratch
-        (`fallback=True`). The Dataset is mutated exactly once (its
-        `graph_version` advances by 1) regardless of query count.
+        (`fallback=True`); if that recount itself times out or hits
+        `opts.limit` the outcome is additionally flagged `inexact=True` —
+        its count may undercount and is never seeded as a future delta
+        base. Single-vertex queries, whose embeddings use no edges and are
+        invisible to pinned enumeration, are rolled forward by counting
+        label-matching vertex inserts directly (vertex deletes retire in
+        place with the label kept, so they never change such a count). The
+        Dataset is mutated exactly once (its `graph_version` advances by 1)
+        regardless of query count.
 
         Accepts one Graph or a list; returns one DeltaOutcome or a list,
         matching the input shape. Raises ValueError (dataset untouched) if
@@ -597,6 +611,15 @@ class Matcher:
                                                   limit=opts.delta_limit)
                 except DeltaOverflow:
                     created = None
+                if created is not None and q.n == 1:
+                    # single-vertex embeddings use no edges, so pinned
+                    # enumeration can't see them: created = inserted
+                    # vertices with the query's label. Vertex deletes
+                    # retire in place (label kept, still matched), so
+                    # destroyed correctly stays 0.
+                    created += int(np.count_nonzero(
+                        canon.new_labels[canon.n_old:]
+                        == int(q.labels[0])))
             if created is not None:
                 count = bases[i] + created - destroyed[i]
                 self._standing[graph_signature(q)] = (new_version, count)
@@ -609,6 +632,7 @@ class Matcher:
                 outcomes.append(DeltaOutcome(
                     count=out.count, created=None, destroyed=None,
                     graph_version=new_version, fallback=True,
+                    inexact=out.timed_out or out.count >= opts.limit,
                     elapsed_s=time.perf_counter() - t0s[i]))
         return outcomes[0] if single else outcomes
 

@@ -52,7 +52,10 @@ class StandingQuery:
     """A continuously-maintained query: registered once, its count rolled
     forward through every `apply_delta` via the delta identity (or a full
     recount on fallback). `count`/`graph_version` always describe the live
-    dataset after the latest applied delta."""
+    dataset after the latest applied delta. `inexact` is True while the
+    latest roll-forward was a fallback recount that timed out or hit its
+    limit — `count` may then undercount; the flag clears as soon as a
+    later delta's recount completes exactly."""
 
     standing_id: int
     query: Graph
@@ -60,6 +63,7 @@ class StandingQuery:
     graph_version: int
     deltas_seen: int = 0
     fallbacks: int = 0
+    inexact: bool = False
 
 
 class MatchQueueRuntime:
@@ -87,7 +91,8 @@ class MatchQueueRuntime:
         self._next_standing_id = 0
         self.stats = {"reissued": 0, "failed": 0, "completed": 0,
                       "checkpoints": 0, "cache_hits": 0,
-                      "deltas_applied": 0, "delta_fallbacks": 0}
+                      "deltas_applied": 0, "delta_fallbacks": 0,
+                      "delta_inexact": 0}
 
     def submit(self, queries: list[Graph], *, limit: int = 1_000_000,
                max_steps: int | None = 50_000) -> None:
@@ -257,7 +262,15 @@ class MatchQueueRuntime:
         standing query's count forward (`Matcher.count_delta`: pinned
         delta enumeration, full recount on fallback). Returns
         {standing_id: DeltaOutcome}. With no standing queries the dataset
-        still advances one version."""
+        still advances one version.
+
+        A fallback recount that timed out or hit its limit is surfaced,
+        not silently adopted: the outcome carries `inexact=True`, the
+        standing query is flagged `inexact` (and `stats["delta_inexact"]`
+        bumped) until a later delta's recount completes exactly. The
+        possibly-undercounted value is still installed — it is the best
+        available estimate and its staleness is visible — but it never
+        becomes a delta base (`Matcher` only seeds exact counts)."""
         sids = sorted(self.standing)
         if not sids:
             self.dataset.apply_delta(delta)
@@ -272,9 +285,12 @@ class MatchQueueRuntime:
             sq.count = out.count
             sq.graph_version = out.graph_version
             sq.deltas_seen += 1
+            sq.inexact = out.inexact
             if out.fallback:
                 sq.fallbacks += 1
                 self.stats["delta_fallbacks"] += 1
+            if out.inexact:
+                self.stats["delta_inexact"] += 1
             result[sid] = out
         return result
 
@@ -290,7 +306,8 @@ class MatchQueueRuntime:
             "pending": [r.query_id for r in self.pending],
             "graph_version": self.dataset.graph_version,
             "standing": {str(s): {"count": sq.count,
-                                  "graph_version": sq.graph_version}
+                                  "graph_version": sq.graph_version,
+                                  "inexact": sq.inexact}
                          for s, sq in self.standing.items()},
         }
         tmp = self.state_path + ".tmp"
@@ -340,4 +357,5 @@ class MatchQueueRuntime:
             if rec is not None and rec["graph_version"] == ckpt_version:
                 sq.count = rec["count"]
                 sq.graph_version = rec["graph_version"]
+                sq.inexact = bool(rec.get("inexact", False))
         return state

@@ -51,6 +51,10 @@ class DeltaOutcome:
     fallback     : True when delta enumeration overflowed (or the base
                    count was unavailable) and `count` came from a full
                    recount instead of the delta identity
+    inexact      : True when the fallback recount itself timed out or hit
+                   `MatchOptions.limit`, so `count` may undercount; always
+                   False on the identity path (exact by construction) and
+                   unusable as a future delta base
     elapsed_s    : wall time spent on this query's delta pass
     """
 
@@ -59,6 +63,7 @@ class DeltaOutcome:
     destroyed: int | None
     graph_version: int
     fallback: bool = False
+    inexact: bool = False
     elapsed_s: float = 0.0
 
 
@@ -148,6 +153,12 @@ def embeddings_touching(query: Graph, graph: Graph, index: DataGraphIndex,
     Pinned DFS per (delta edge × query-edge orientation), deduplicated via
     a set of embedding tuples. Raises DeltaOverflow once the set would
     exceed `limit` — the caller's cue to recount from scratch instead.
+
+    A single-vertex query has no edges, so no embedding of it can touch a
+    delta edge and this always returns 0. Its counts still change when a
+    delta *inserts vertices* with the query's label — `Matcher.count_delta`
+    accounts for those directly (vertex deletes retire in place, label
+    kept, so they never change a single-vertex count).
     """
     if pairs.shape[0] == 0 or query.n < 2:
         return 0
@@ -158,9 +169,16 @@ def embeddings_touching(query: Graph, graph: Graph, index: DataGraphIndex,
 
     def extend(order: list[tuple[int, int]], depth: int, used: set[int]):
         if depth == len(order):
-            if len(found) >= limit:
-                raise DeltaOverflow(f"delta enumeration exceeded {limit}")
-            found.add(tuple(mapping.tolist()))
+            # dedup before the cap check: re-deriving an already-counted
+            # embedding (via a second delta edge or pin) at len == limit
+            # must not spuriously overflow — the distinct count is capped,
+            # not the number of derivations
+            t = tuple(mapping.tolist())
+            if t not in found:
+                if len(found) >= limit:
+                    raise DeltaOverflow(
+                        f"delta enumeration exceeded {limit}")
+                found.add(t)
             return
         x, p = order[depth]
         for v_ in _candidates(query, graph, index, x, p, int(mapping[p])):

@@ -209,6 +209,19 @@ def test_embeddings_touching_overflow():
             embeddings_touching(query, data, idx, c.del_pairs, limit=1)
 
 
+def test_embeddings_touching_dedups_before_overflow_check():
+    # path query in a path graph: both embeddings use both delta edges, so
+    # every embedding is re-derived via the second pin. At limit == the
+    # distinct count, the duplicate derivation must not raise.
+    data = build_graph(3, [(0, 1), (1, 2)], [0, 0, 0])
+    query = build_graph(3, [(0, 1), (1, 2)], [0, 0, 0])
+    idx = build_data_index(data)
+    pairs = np.asarray([(0, 1), (1, 2)], dtype=np.int64)
+    assert embeddings_touching(query, data, idx, pairs, limit=2) == 2
+    with pytest.raises(DeltaOverflow):
+        embeddings_touching(query, data, idx, pairs, limit=1)
+
+
 def test_created_destroyed_match_materialized_sets():
     for seed in range(5):
         data, query, deltas = delta_workload(seed, n=50, n_deltas=1,
@@ -281,6 +294,53 @@ def test_count_delta_overflow_falls_back():
     out = m.count_delta(q, GraphDelta(edge_inserts=[(0, 1)]))
     assert not out.fallback
     assert out.count == 8 and out.created == 2 and out.destroyed == 0
+
+
+def test_count_delta_single_vertex_query():
+    # a single-vertex query's embeddings use no edges, so the pinned
+    # enumeration can't see them: vertex inserts with the query's label
+    # must be counted directly (and vertex deletes, which retire in place
+    # with the label kept, must not change the count)
+    g = build_graph(3, [(0, 1), (1, 2)], [0, 0, 1])
+    ds = Dataset.from_graph(g)
+    m = Matcher(ds)
+    q = build_graph(1, [], [0])
+    assert m.count(q).count == 2            # seed the standing base
+    out = m.count_delta(q, GraphDelta(vertex_inserts=[0, 1, 0]))
+    assert not out.fallback and out.created == 2 and out.destroyed == 0
+    assert out.count == 4
+    assert out.count == Matcher(Dataset.from_graph(ds.graph)).count(q).count
+    # the rolled-forward base stays usable: deletes + edge ops are no-ops
+    out = m.count_delta(q, GraphDelta(edge_inserts=[(0, 2)],
+                                      vertex_deletes=[1]))
+    assert not out.fallback and out.created == 0 and out.destroyed == 0
+    assert out.count == 4
+    assert out.count == Matcher(Dataset.from_graph(ds.graph)).count(q).count
+
+
+def test_count_delta_fallback_propagates_inexact():
+    # square, all label 0: the single-edge query has 8 embeddings. With no
+    # base the recount runs; limit=2 caps it, so the outcome must be
+    # flagged inexact instead of silently passing off 2 as exact.
+    g = build_graph(4, [(0, 1), (1, 2), (2, 3), (3, 0)], [0, 0, 0, 0])
+    m = Matcher(Dataset.from_graph(g))
+    q = build_graph(2, [(0, 1)], [0, 0])
+    out = m.count_delta(q, GraphDelta(edge_inserts=[(0, 2)]), limit=2)
+    assert out.fallback and out.inexact and out.count == 2
+    # an exact fallback recount stays unflagged
+    out = m.count_delta(q, GraphDelta(edge_deletes=[(0, 2)]))
+    assert out.fallback and not out.inexact and out.count == 8
+
+
+def test_latest_map_pruned_with_lru_eviction():
+    # the carry-forward pointer map must shrink with the plan cache: a
+    # long-lived Matcher over many distinct queries is bounded by maxsize
+    ds = Dataset.random(80, 4.0, 3, seed=5)
+    m = Matcher(ds, plan_cache_size=2)
+    for seed in range(6):
+        m.count(ds.random_query(3, seed=seed))
+    assert len(m._latest) <= 2
+    assert set(m._latest.values()) <= set(m._cache.keys())
 
 
 def test_invalid_delta_leaves_dataset_untouched():
@@ -403,6 +463,33 @@ def test_queue_standing_parity(tmp_path):
     assert rt.standing[sid].count == fresh.count(q, engine="ref").count
     assert rt.standing[sid].deltas_seen == 3
     assert rt.stats["deltas_applied"] == 3
+
+
+def test_queue_apply_delta_surfaces_inexact(tmp_path):
+    # square, all label 0: the single-edge query has 8 embeddings.
+    # delta_limit=1 forces the fallback recount, limit=2 caps it: the
+    # standing query must be flagged inexact rather than silently adopting
+    # an undercount as exact — and must self-heal on an exact recount.
+    g = build_graph(4, [(0, 1), (1, 2), (2, 3), (3, 0)], [0, 0, 0, 0])
+    sp = str(tmp_path / "q.json")
+    rt = MatchQueueRuntime(g, engine="ref", state_path=sp)
+    q = build_graph(2, [(0, 1)], [0, 0])
+    sid = rt.register_standing(q)           # exact: 8
+    rt.matcher.options = rt.matcher.options.replace(limit=2, delta_limit=1)
+    outs = rt.apply_delta(GraphDelta(edge_deletes=[(0, 1)]))
+    assert outs[sid].fallback and outs[sid].inexact
+    assert rt.standing[sid].inexact
+    assert rt.stats["delta_inexact"] == 1
+    rt.checkpoint()                         # the flag round-trips
+    rt.standing[sid].inexact = False
+    rt.restore()
+    assert rt.standing[sid].inexact
+    # exact recount on the next delta clears the flag
+    rt.matcher.options = rt.matcher.options.replace(limit=1_000_000)
+    outs = rt.apply_delta(GraphDelta(edge_inserts=[(0, 1)]))
+    assert outs[sid].fallback and not outs[sid].inexact
+    assert not rt.standing[sid].inexact
+    assert rt.standing[sid].count == 8
 
 
 def test_queue_restore_rejects_version_mismatch(tmp_path):
