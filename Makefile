@@ -1,6 +1,6 @@
 .PHONY: verify test test-tier2 bench bench-baseline perf-smoke compile-bench \
 	compile-smoke batch-bench batch-smoke shard-test shard-bench \
-	shard-smoke delta-bench delta-smoke docs-check
+	shard-smoke delta-bench delta-smoke serve-bench serve-smoke docs-check
 
 verify:
 	bash scripts/ci.sh
@@ -15,13 +15,14 @@ bench:
 	PYTHONPATH=src python -m benchmarks.run --json BENCH_engine.json
 
 # regenerate the committed perf-smoke baselines (fig7 + scheduler + compile
-# + batch + shard + delta)
+# + batch + shard + delta + serve)
 bench-baseline:
 	PYTHONPATH=src python -m benchmarks.run --only fig7,sched --json benchmarks/BENCH_engine.json
 	PYTHONPATH=src python -m benchmarks.compile_bench --json benchmarks/BENCH_compile.json
 	PYTHONPATH=src python -m benchmarks.batch_bench --json benchmarks/BENCH_batch.json
 	PYTHONPATH=src XLA_FLAGS="--xla_force_host_platform_device_count=4" python -m benchmarks.shard_bench --json benchmarks/BENCH_shard.json
 	PYTHONPATH=src python -m benchmarks.delta_bench --json benchmarks/BENCH_delta.json
+	PYTHONPATH=src python -m benchmarks.serve_bench --json benchmarks/BENCH_serve.json
 
 perf-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only fig7 --json /tmp/BENCH_new.json
@@ -56,8 +57,15 @@ delta-bench:
 delta-smoke: delta-bench
 	PYTHONPATH=src python scripts/perf_smoke.py --delta /tmp/BENCH_delta_new.json benchmarks/BENCH_delta.json
 
+# always-on serving: open-loop latency/shed + supervised crash recovery
+serve-bench:
+	PYTHONPATH=src python -m benchmarks.serve_bench --json /tmp/BENCH_serve_new.json
+
+serve-smoke: serve-bench
+	PYTHONPATH=src python scripts/perf_smoke.py --serve /tmp/BENCH_serve_new.json benchmarks/BENCH_serve.json
+
 # documentation gates: link/anchor check, README quickstart smoke, docstrings
 docs-check:
 	PYTHONPATH=src python scripts/check_docs.py README.md docs
 	PYTHONPATH=src python scripts/run_readme.py
-	PYTHONPATH=src python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming
+	PYTHONPATH=src python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming src/repro/runtime/service.py

@@ -1,0 +1,143 @@
+"""Always-on serving benchmark: open-loop latency/qps/shed-rate plus
+crash-recovery time for `repro.runtime.service.MatchService`.
+
+Evidence for the serving subsystem's acceptance criterion, per fig7
+dataset (shared CI workload):
+
+  * **warm-up / capacity** — the dataset's query mix is drained once
+    through the service (plans compile, caches warm) and its exact counts
+    become the oracle; the drain wall time gives the warm sequential
+    capacity estimate.
+  * **open loop** — the same mix is offered as a seeded Poisson arrival
+    process at `LOAD_FACTOR ×` the measured capacity (arrivals never wait
+    for completions — the admission/backpressure regime), measuring p50 /
+    p99 completion latency, sustained qps, and the shed rate. At half
+    capacity a healthy service sheds (close to) nothing — that is the
+    gated criterion, machine-independent by construction.
+  * **recovery** — the workload is re-run under a `ServiceSupervisor`
+    with an injected crash (`FaultInjector(fail_at={1})`: the process
+    dies at dispatch 1 with a bucket in flight, the hardest point);
+    recovery wall time is measured and the final counts must be
+    bit-identical to the oracle with zero lost / double-counted queries.
+
+Rows:
+  serve.<ds>.p50      us = p50 latency   derived qps/offered/completed/
+                                         shed/failed/shed_rate
+  serve.<ds>.p99      us = p99 latency
+  serve.<ds>.recovery us = recovery time derived match/restarts/completed
+
+  PYTHONPATH=src python -m benchmarks.serve_bench                 # print CSV
+  PYTHONPATH=src python -m benchmarks.serve_bench --json [PATH]   # + JSON
+                                                 (default BENCH_serve.json)
+
+`scripts/perf_smoke.py --serve` gates the accounting identity
+(offered == completed + shed + failed), the shed rate at half capacity,
+and exact recovery against the committed benchmarks/BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from repro.runtime.ft import FaultInjector
+from repro.runtime.service import (MatchService, ServiceConfig,
+                                   ServiceSupervisor, arrival_schedule,
+                                   open_loop)
+
+from .common import bench_row, fig7_workloads
+
+SERVE_DATASETS = ["yeast", "wordnet", "dblp"]
+N_REQUESTS = 32        # open-loop offered load per dataset
+LOAD_FACTOR = 0.5      # offered qps as a fraction of measured capacity
+LIMIT = 100_000
+
+
+def serve_dataset(name, data, queries, *, n_requests=N_REQUESTS, seed=0):
+    """Benchmark one dataset: warm-up/capacity, open loop, recovery."""
+    rows = []
+    svc = MatchService(data, config=ServiceConfig(
+        inbox_capacity=max(64, n_requests)))
+    t0 = time.perf_counter()
+    tickets = [svc.submit(q, limit=LIMIT, max_steps=None, force=True)
+               for q in queries]
+    warm_counts = svc.drain()
+    warm_s = time.perf_counter() - t0
+    oracle = [warm_counts[t.request_id] for t in tickets]
+    capacity_qps = len(queries) / max(warm_s, 1e-9)
+
+    # open loop at LOAD_FACTOR x capacity, warm caches, fresh stat window
+    svc.reset_stats()
+    qps = max(capacity_qps * LOAD_FACTOR, 1.0)
+    workload = [dict(query=queries[i % len(queries)], limit=LIMIT,
+                     max_steps=None) for i in range(n_requests)]
+    schedule = arrival_schedule(n_requests, qps, seed=seed)
+    s = open_loop(svc, workload, schedule)
+    derived = (f"qps={s['qps_sustained']:.1f};offered={s['offered']}"
+               f";completed={s['completed']};shed={s['shed']}"
+               f";failed={s['failed']};shed_rate={s['shed_rate']:.4f}"
+               f";offered_qps={qps:.1f}")
+    rows.append(bench_row(f"serve.{name}.p50", s["p50_s"], derived))
+    rows.append(bench_row(f"serve.{name}.p99", s["p99_s"], derived))
+
+    # recovery: supervised re-run with an injected crash mid-drain
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="serve_ckpt_")
+    os.close(fd)
+    os.unlink(path)
+    try:
+        cfg = ServiceConfig(bucket_size=max(2, len(queries) // 3),
+                            state_path=path)
+        sup = ServiceSupervisor(
+            lambda: MatchService(data, config=cfg),
+            [dict(query=q, limit=LIMIT, max_steps=None) for q in queries])
+        res = sup.run(injector=FaultInjector(fail_at={1}))
+        recovered = [res.counts[i] for i in range(len(queries))]
+        match = int(recovered == oracle and res.restarts == 1)
+        rows.append(bench_row(
+            f"serve.{name}.recovery", max(res.recovery_s, 1e-9),
+            f"match={match};restarts={res.restarts}"
+            f";completed={res.service.stats['completed']}"
+            f";queries={len(queries)}"))
+    finally:
+        if os.path.exists(path):
+            os.unlink(path)
+    return rows
+
+
+def serve_rows(scale=0.03, *, names=None, seed=0):
+    """All serving rows over the shared fig7 workloads."""
+    rows = []
+    for name, (data, sized) in fig7_workloads(
+            scale, names=names or SERVE_DATASETS).items():
+        queries = [q for _, q in sized]
+        if not queries:
+            continue
+        rows += serve_dataset(name, data, queries, seed=seed)
+    return rows
+
+
+def main() -> None:
+    """CLI entry point (CSV to stdout, optional BENCH JSON)."""
+    from .run import parse_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to PATH (default BENCH_serve.json)")
+    args = ap.parse_args()
+    rows = serve_rows(scale=0.08 if args.full else 0.03)
+    print("name,us,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.json:
+        from .common import bench_env
+        with open(args.json, "w") as f:
+            json.dump({"env": bench_env(), "rows": parse_rows(rows)}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

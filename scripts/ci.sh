@@ -49,6 +49,13 @@ python -m benchmarks.delta_bench --json "$delta_json"
 echo "== delta smoke (delta/full maintenance-cost gate) =="
 python scripts/perf_smoke.py --delta "$delta_json" benchmarks/BENCH_delta.json
 
+echo "== serve bench (open-loop latency/shed + crash recovery) =="
+serve_json="$(mktemp /tmp/BENCH_serve_new.XXXXXX.json)"
+python -m benchmarks.serve_bench --json "$serve_json"
+
+echo "== serve smoke (accounting/shed/recovery invariant gate) =="
+python scripts/perf_smoke.py --serve "$serve_json" benchmarks/BENCH_serve.json
+
 echo "== shard differential (4 forced host devices) =="
 # sharded == sequential == ref across the strategy workloads; runs in its
 # own process because the device count must be fixed before jax loads
@@ -70,4 +77,4 @@ echo "== docs: README quickstart executes =="
 python scripts/run_readme.py
 
 echo "== docs: public-surface docstring gate =="
-python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming
+python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming src/repro/runtime/service.py

@@ -9,6 +9,23 @@ Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --batch NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --shard NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --delta NEW.json [BASELINE.json]
+       python scripts/perf_smoke.py --serve NEW.json [BASELINE.json]
+
+Serve mode: both files are `benchmarks.serve_bench --json` outputs (rows
+serve.<ds>.p50 / serve.<ds>.p99 / serve.<ds>.recovery — open-loop latency
+percentiles at LOAD_FACTOR x the same host's measured warm capacity, plus
+supervised crash-recovery time). Unlike the other modes there is no
+timing ratio to gate: every gated property is an exact machine-independent
+invariant read from each row's derived fields. Per dataset the gate
+requires (1) the accounting identity offered == completed + shed + failed
+— the admission path may refuse work but can never lose or double-count
+it; (2) shed_rate <= SERVE_SHED_MAX while offered load sits at half the
+measured capacity — a healthy service under moderate load serves, it
+doesn't shed; (3) recovery match == 1 — after an injected executor death
+mid-drain the supervised restart reproduced the oracle counts
+bit-identically with the expected single restart. Committed-baseline p99
+and recovery times print for context only (wall clock is host-dependent
+and not gated).
 
 Delta mode: both files are `benchmarks.delta_bench --json` outputs (rows
 delta.<ds>.full / delta.<ds>.delta — per-update cost of keeping standing
@@ -110,6 +127,7 @@ DELTA_REGRESS_MAX = 1.0          # no dataset may maintain counts slower
                                  # incrementally than by full recount
 DELTA_FLOOR_US = 5000.0          # per-update; below this the full recount
                                  # is itself sub-ms and fixed-cost dominated
+SERVE_SHED_MAX = 0.25            # max shed rate at half measured capacity
 
 
 def load(path: str) -> dict:
@@ -196,6 +214,61 @@ def delta_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
         out[ds] = (row["us_per_call"] / max(full["us_per_call"], 1e-9),
                    row["us_per_call"], full["us_per_call"])
     return out
+
+
+def serve_fields(rows: dict) -> dict[str, dict]:
+    """dataset -> merged derived k=v fields + p50/p99/recovery us."""
+    out: dict[str, dict] = {}
+    for name, row in rows.items():
+        parts = name.split(".")
+        if len(parts) != 3 or parts[0] != "serve":
+            continue
+        ds, metric = parts[1], parts[2]
+        entry = out.setdefault(ds, {})
+        entry[f"{metric}_us"] = row["us_per_call"]
+        for part in row.get("derived", "").split(";"):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                entry.setdefault(k, v)
+    return out
+
+
+def main_serve(new_path: str, base_path: str) -> int:
+    """Gate the serving invariants (see module docstring)."""
+    new = serve_fields(load(new_path))
+    base = serve_fields(load(base_path))
+    if not new:
+        print("perf-smoke: no serve.<ds>.* rows found; "
+              "did benchmarks.serve_bench run with --json?")
+        return 2
+    failed = False
+    for ds, f in sorted(new.items()):
+        problems = []
+        offered = int(f.get("offered", 0))
+        completed = int(f.get("completed", -1))
+        shed = int(f.get("shed", 0))
+        lost = int(f.get("failed", 0))
+        shed_rate = float(f.get("shed_rate", 0.0))
+        if completed + shed + lost != offered:
+            problems.append(f"accounting broken ({completed}+{shed}+{lost}"
+                            f" != {offered})")
+        if shed_rate > SERVE_SHED_MAX:
+            problems.append(f"shed_rate {shed_rate:.3f} > {SERVE_SHED_MAX}"
+                            " at half capacity")
+        if int(f.get("match", 0)) != 1:
+            problems.append(f"recovery mismatch (match={f.get('match')}, "
+                            f"restarts={f.get('restarts')})")
+        ctx = ""
+        if ds in base:
+            ctx = (f" (baseline p99 {base[ds].get('p99_us', 0.0):.0f}us, "
+                   f"recovery {base[ds].get('recovery_us', 0.0):.0f}us)")
+        verdict = "ok" if not problems else "FAIL: " + "; ".join(problems)
+        failed = failed or bool(problems)
+        print(f"perf-smoke: serve {ds}: p99 {f.get('p99_us', 0.0):.0f}us "
+              f"qps={f.get('qps', '?')} shed_rate={shed_rate:.3f} "
+              f"recovery {f.get('recovery_us', 0.0):.0f}us "
+              f"restarts={f.get('restarts', '?')}{ctx} {verdict}")
+    return 1 if failed else 0
 
 
 def main_delta(new_path: str, base_path: str) -> int:
@@ -361,7 +434,8 @@ def main_compile(new_path: str, base_path: str) -> int:
 
 def main() -> int:
     args = [a for a in sys.argv[1:]
-            if a not in ("--compile", "--batch", "--shard", "--delta")]
+            if a not in ("--compile", "--batch", "--shard", "--delta",
+                         "--serve")]
     if not args:
         print(__doc__)
         return 2
@@ -377,6 +451,9 @@ def main() -> int:
     if "--delta" in sys.argv[1:]:
         return main_delta(args[0], args[1] if len(args) > 1 else
                           "benchmarks/BENCH_delta.json")
+    if "--serve" in sys.argv[1:]:
+        return main_serve(args[0], args[1] if len(args) > 1 else
+                          "benchmarks/BENCH_serve.json")
     new_path = args[0]
     base_path = args[1] if len(args) > 1 else \
         "benchmarks/BENCH_engine.json"

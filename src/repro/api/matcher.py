@@ -206,11 +206,13 @@ class Matcher:
 
     def __init__(self, dataset: Dataset | Graph,
                  options: MatchOptions | None = None, *,
-                 plan_cache_size: int = 128, intersect_fn=None):
+                 plan_cache_size: int = 128, intersect_fn=None,
+                 tenant: str = "default"):
         if isinstance(dataset, Graph):
             dataset = Dataset.from_graph(dataset)
         self.dataset = dataset
         self.options = options if options is not None else MatchOptions()
+        self.tenant = tenant
         if plan_cache_size < 1:
             raise ValueError("plan_cache_size must be >= 1")
         self._maxsize = plan_cache_size
@@ -241,6 +243,27 @@ class Matcher:
         return CacheInfo(hits=self._hits, misses=self._misses,
                          size=len(self._cache), maxsize=self._maxsize,
                          carried=self._carried)
+
+    def tenant_view(self, tenant: str, *,
+                    plan_cache_size: int | None = None,
+                    options: MatchOptions | None = None) -> "Matcher":
+        """A tenant-isolated Matcher over the same preprocessed Dataset.
+
+        The expensive query-independent state (CSR adjacency, label index,
+        NLF histograms — everything the Dataset owns) is shared; the
+        per-query state (plan cache, warm superbatch schedulers, standing
+        bases, hit/miss counters) is private to the view. This is the
+        serving isolation primitive (docs/serving.md): one tenant's cold
+        query storm evicts only its own LRU entries, never another
+        tenant's warm plans, and `cache_info()` on the view reports that
+        tenant's hits alone. Defaults inherit this Matcher's options,
+        cache size, and intersect_fn."""
+        return Matcher(self.dataset,
+                       options if options is not None else self.options,
+                       plan_cache_size=(plan_cache_size
+                                        if plan_cache_size is not None
+                                        else self._maxsize),
+                       intersect_fn=self._intersect_fn, tenant=tenant)
 
     def clear_cache(self) -> None:
         """Drop every cached CompiledQuery and warm superbatch scheduler

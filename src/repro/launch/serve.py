@@ -5,6 +5,15 @@ subgraph-match query serving through the repro.api session layer.
   PYTHONPATH=src python -m repro.launch.serve --arch bert4rec --shape serve_p99
   PYTHONPATH=src python -m repro.launch.serve --arch match --dataset yeast \\
       --scale 0.05 --n-queries 32
+  PYTHONPATH=src python -m repro.launch.serve --arch match --serve-loop \\
+      --dataset yeast --qps 50 --n-queries 64
+
+The default --arch match mode is a closed-loop batch: all queries exist up
+front and match_many drains them as one superbatch. --serve-loop instead
+runs the always-on MatchService open loop: requests arrive on a seeded
+Poisson schedule at --qps (independent of completions), pass through
+admission control (bounded inbox + deadline-budget shedding), and are
+bucketed/dispatched deadline-aware. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -42,6 +51,41 @@ def serve_match(args) -> None:
           f"plan cache: hits={info.hits} misses={info.misses}")
 
 
+def serve_match_loop(args) -> None:
+    """Open-loop match serving through the always-on MatchService:
+    requests arrive on a seeded Poisson schedule at --qps whether or not
+    earlier ones finished, so under overload the admission controller
+    sheds with a typed Overloaded ticket instead of queueing without
+    bound. Prints the open-loop summary (sustained qps, p50/p99 latency,
+    shed rate) plus service counters."""
+    from repro.api import Dataset, MatchOptions
+    from repro.runtime.service import (MatchService, ServiceConfig,
+                                       arrival_schedule, open_loop)
+
+    dataset = Dataset.synthetic(args.dataset, scale=args.scale)
+    queries = [dataset.random_query(args.query_size, seed=s)
+               for s in range(min(args.n_queries, 16))]
+    svc = MatchService(dataset, config=ServiceConfig(
+        inbox_capacity=max(64, args.n_queries)),
+        options=MatchOptions(engine=args.engine, limit=args.limit))
+    # warm the plan caches so the measured loop isn't dominated by compiles
+    for q in queries:
+        svc.submit(q, limit=args.limit, force=True)
+    svc.drain()
+    svc.reset_stats()
+    workload = [dict(query=queries[i % len(queries)], limit=args.limit)
+                for i in range(args.n_queries)]
+    schedule = arrival_schedule(args.n_queries, args.qps, seed=args.seed)
+    s = open_loop(svc, workload, schedule)
+    print(f"open loop vs {dataset!r}: offered {s['offered']} @ "
+          f"{args.qps:.1f} qps → completed {s['completed']} "
+          f"shed {s['shed']} failed {s['failed']} "
+          f"(sustained {s['qps_sustained']:.1f} qps)")
+    print(f"latency p50 {s['p50_s'] * 1e3:.1f}ms p99 {s['p99_s'] * 1e3:.1f}ms "
+          f"shed_rate {s['shed_rate']:.3f} makespan {s['makespan_s']:.2f}s")
+    print(f"service stats: {svc.stats}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -56,10 +100,21 @@ def main():
     ap.add_argument("--limit", type=int, default=100_000)
     ap.add_argument("--engine", default="auto",
                     choices=["ref", "vector", "auto"])
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="open-loop MatchService mode (--arch match only): "
+                         "Poisson arrivals at --qps through admission "
+                         "control instead of a single closed-loop batch")
+    ap.add_argument("--qps", type=float, default=50.0,
+                    help="offered arrival rate for --serve-loop")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="arrival-schedule seed for --serve-loop")
     args = ap.parse_args()
 
     if args.arch == "match":
-        serve_match(args)
+        if args.serve_loop:
+            serve_match_loop(args)
+        else:
+            serve_match(args)
         return
 
     mesh = make_local_mesh()

@@ -18,6 +18,7 @@ The failure-injection hooks make all of this testable on one CPU host
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Callable
 
@@ -29,20 +30,47 @@ __all__ = ["FaultInjector", "Supervisor", "SuperviseResult"]
 
 
 class FaultInjector:
-    """Deterministic fault schedule: raise at given step indices."""
+    """Fault schedule shared by the training Supervisor and the match
+    service's chaos tests (tests/test_service.py), in two composable modes:
+
+      * deterministic — raise at the given step indices (`fail_at`), sleep
+        at others (`straggle_at`); each index fires at most once, so a
+        restarted run that replays the same step is not killed again;
+      * probabilistic — every `check()` draws from a private
+        `random.Random(rng_seed)` and raises with probability `fail_rate`.
+        The draw sequence depends only on the seed and the number of
+        `check()` calls, so a chaos run is reproducible from
+        (rng_seed, fail_rate) instead of a hand-enumerated index set.
+
+    Both modes raise RuntimeError; `faults_fired` counts probabilistic
+    fires (deterministic ones are in `fired`)."""
 
     def __init__(self, fail_at: set[int] | None = None,
-                 straggle_at: dict[int, float] | None = None):
+                 straggle_at: dict[int, float] | None = None, *,
+                 fail_rate: float = 0.0, rng_seed: int = 0):
+        if not 0.0 <= fail_rate < 1.0:
+            raise ValueError(f"fail_rate must be in [0, 1), got {fail_rate}")
         self.fail_at = set(fail_at or ())
         self.straggle_at = dict(straggle_at or {})
         self.fired: set[int] = set()
+        self.fail_rate = fail_rate
+        self.rng = random.Random(rng_seed)
+        self.faults_fired = 0
 
     def check(self, step: int) -> None:
+        """Raise RuntimeError if a fault is scheduled (or drawn) for this
+        call; otherwise return. Called once per supervised step/dispatch."""
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
             raise RuntimeError(f"injected fault at step {step}")
+        if self.fail_rate and self.rng.random() < self.fail_rate:
+            self.faults_fired += 1
+            raise RuntimeError(
+                f"injected probabilistic fault at step {step} "
+                f"(fire #{self.faults_fired})")
 
     def delay(self, step: int) -> float:
+        """Seconds of injected straggle for this step (0.0 when none)."""
         return self.straggle_at.get(step, 0.0)
 
 

@@ -32,7 +32,8 @@ from collections import deque
 from repro.api import BATCH_MODES, Dataset, Matcher, MatchOptions
 from repro.core.graph import Graph
 
-__all__ = ["QueryItem", "StandingQuery", "MatchQueueRuntime"]
+__all__ = ["QueryItem", "StandingQuery", "MatchQueueRuntime",
+           "execute_chunk"]
 
 
 @dataclasses.dataclass
@@ -66,6 +67,71 @@ class StandingQuery:
     inexact: bool = False
 
 
+def execute_chunk(matcher: Matcher, chunk: list, *, batch: str = "auto",
+                  fail_hook=None) -> list[tuple]:
+    """Execute one chunk of query items on a shared Matcher; returns
+    [(item, outcome | None, elapsed_s)] in chunk order. Items are anything
+    with `.query` / `.limit` / `.max_steps` attributes (QueryItem here,
+    MatchRequest in `repro.runtime.service`) — an outcome of None means
+    the executor died on that item and the caller must re-issue it.
+
+    The superbatched path (`batch="auto"`, ≥2 items) groups items by
+    (limit, max_steps) — submitters normally make these uniform — and
+    amortizes each group's wall time per item. A group falls back to
+    individual execution (its own budget, its own timing) when its shared
+    execution raises — a poison query fails alone instead of burning the
+    whole chunk's retry attempts, and successfully-batched groups keep
+    their results — or when the bucket's *pooled* step budget capped:
+    per-item budgets are a per-query contract, so a runaway query must not
+    silently truncate its siblings' counts.
+
+    `fail_hook(item)` (chaos hook) runs before each item's individual
+    execution; raising there simulates the executor dying on that item
+    (it is reported back with outcome None)."""
+    done: dict[int, tuple] = {}            # chunk idx -> (outcome, dt)
+    if batch == "auto" and len(chunk) > 1:
+        groups: dict[tuple, list[int]] = {}
+        for k, it in enumerate(chunk):
+            groups.setdefault((it.limit, it.max_steps), []).append(k)
+        for (limit, max_steps), ks in groups.items():
+            t0 = time.perf_counter()
+            try:
+                if fail_hook is not None:
+                    for k in ks:
+                        fail_hook(chunk[k])
+                outs = matcher.match_many(
+                    [chunk[k].query for k in ks], limit=limit,
+                    budget=max_steps, batch="auto")
+            except Exception:    # noqa: BLE001 — isolate per item below
+                continue
+            per = (time.perf_counter() - t0) / len(ks)
+            for k, out in zip(ks, outs):
+                # a capped *bucket* (batched_queries > 0) pooled its
+                # members' budgets, so those counts may be truncated —
+                # redo them under their own per-item budget. Sequential
+                # fallbacks already honored the per-item contract, so
+                # their outcomes (timed out or not) are kept.
+                if (out.timed_out
+                        and getattr(out.stats, "batched_queries", 0)):
+                    continue
+                done[k] = (out, per)
+    results = []
+    for k, it in enumerate(chunk):
+        if k in done:
+            results.append((it, *done[k]))
+            continue
+        t0 = time.perf_counter()
+        try:
+            if fail_hook is not None:
+                fail_hook(it)
+            out = matcher.count(it.query, limit=it.limit,
+                                budget=it.max_steps)
+            results.append((it, out, time.perf_counter() - t0))
+        except Exception:    # noqa: BLE001 — executor died mid-item
+            results.append((it, None, 0.0))
+    return results
+
+
 class MatchQueueRuntime:
     """Queue of queries over a shared data graph. `n_executors` simulates the
     pod-level workers; each executor processes one query item at a time
@@ -89,8 +155,8 @@ class MatchQueueRuntime:
         self.results: dict[int, QueryItem] = {}
         self.standing: dict[int, StandingQuery] = {}
         self._next_standing_id = 0
-        self.stats = {"reissued": 0, "failed": 0, "completed": 0,
-                      "checkpoints": 0, "cache_hits": 0,
+        self.stats = {"reissued": 0, "stragglers": 0, "failed": 0,
+                      "completed": 0, "checkpoints": 0, "cache_hits": 0,
                       "deltas_applied": 0, "delta_fallbacks": 0,
                       "delta_inexact": 0}
 
@@ -130,8 +196,11 @@ class MatchQueueRuntime:
             while self.pending and len(chunk) < window:
                 item = self.pending.popleft()
                 done = self.results.get(item.query_id)
-                if done is not None and done.done and done.count is not None:
-                    continue                       # restored: already counted
+                if done is not None and done.done:
+                    # restored: already counted — or already permanently
+                    # failed (count=None), which must not be resurrected
+                    # with a fresh retry budget
+                    continue
                 item.attempts += 1
                 # compile before the failure point: the plan lives in the
                 # shared Matcher, so a re-issued attempt starts from the
@@ -166,66 +235,28 @@ class MatchQueueRuntime:
                 it.elapsed_s = dt
                 it.done = True
                 if it.elapsed_s > self.deadline_s:
-                    # straggler: result kept (first-result-wins), flagged
-                    self.stats["reissued"] += 1
+                    # straggler: the deadline overrun only *flags* the item
+                    # (first-result-wins, its count is kept and nothing is
+                    # re-executed) — distinct from stats["reissued"], which
+                    # counts real re-issues after an executor death
+                    self.stats["stragglers"] += 1
                 self.results[it.query_id] = it
                 self.stats["completed"] += 1
             processed += len(chunk)
             if checkpoint_every and processed >= checkpoint_every:
                 processed = 0
                 self.checkpoint()
+        if checkpoint_every:
+            # terminal checkpoint: the last window's results — and any item
+            # that permanently failed while the chunk was empty — must be
+            # durable before the drain reports idle
+            self.checkpoint()
         return {i: r.count for i, r in sorted(self.results.items())}
 
     def _exec_chunk(self, chunk: list[QueryItem], batch: str):
-        """Execute one drained chunk; returns [(item, outcome | None,
-        elapsed_s)].
-
-        The superbatched path groups items by (limit, max_steps) — submit()
-        normally makes these uniform — and amortizes each group's wall time
-        per item. A group falls back to individual execution (its own
-        budget, its own timing) when its shared execution raises — a poison
-        query fails alone instead of burning the whole chunk's retry
-        attempts, and successfully-batched groups keep their results — or
-        when the bucket's *pooled* step budget capped: per-item budgets are
-        a per-query contract, so a runaway query must not silently truncate
-        its siblings' counts."""
-        done: dict[int, tuple] = {}            # chunk idx -> (outcome, dt)
-        if batch == "auto" and len(chunk) > 1:
-            groups: dict[tuple, list[int]] = {}
-            for k, it in enumerate(chunk):
-                groups.setdefault((it.limit, it.max_steps), []).append(k)
-            for (limit, max_steps), ks in groups.items():
-                t0 = time.perf_counter()
-                try:
-                    outs = self.matcher.match_many(
-                        [chunk[k].query for k in ks], limit=limit,
-                        budget=max_steps, batch="auto")
-                except Exception:    # noqa: BLE001 — isolate per item below
-                    continue
-                per = (time.perf_counter() - t0) / len(ks)
-                for k, out in zip(ks, outs):
-                    # a capped *bucket* (batched_queries > 0) pooled its
-                    # members' budgets, so those counts may be truncated —
-                    # redo them under their own per-item budget. Sequential
-                    # fallbacks already honored the per-item contract, so
-                    # their outcomes (timed out or not) are kept.
-                    if (out.timed_out
-                            and getattr(out.stats, "batched_queries", 0)):
-                        continue
-                    done[k] = (out, per)
-        results = []
-        for k, it in enumerate(chunk):
-            if k in done:
-                results.append((it, *done[k]))
-                continue
-            t0 = time.perf_counter()
-            try:
-                out = self.matcher.count(it.query, limit=it.limit,
-                                         budget=it.max_steps)
-                results.append((it, out, time.perf_counter() - t0))
-            except Exception:    # noqa: BLE001 — executor died mid-item
-                results.append((it, None, 0.0))
-        return results
+        """Execute one drained chunk through the shared `execute_chunk`
+        helper; returns [(item, outcome | None, elapsed_s)]."""
+        return execute_chunk(self.matcher, chunk, batch=batch)
 
     def _requeue(self, item: QueryItem) -> None:
         if item.attempts < self.max_attempts:
@@ -296,14 +327,22 @@ class MatchQueueRuntime:
 
     # ------------------------------------------------------------- checkpoint
     def checkpoint(self) -> None:
-        """Persist queue results, pending ids, standing-query counts, and
-        the dataset's graph_version (restore() refuses a checkpoint taken
-        against a different version — those counts are stale)."""
+        """Persist queue results, pending ids, per-item retry `attempts`,
+        standing-query counts, and the dataset's graph_version (restore()
+        refuses a checkpoint taken against a different version — those
+        counts are stale). A permanently-failed item is recorded as a
+        null count *with* its spent attempts, so a restart resumes it as
+        failed instead of resurrecting it with a fresh retry budget."""
         if not self.state_path:
             return
+        attempts = {str(i): r.attempts for i, r in self.results.items()
+                    if r.attempts}
+        attempts.update({str(r.query_id): r.attempts for r in self.pending
+                         if r.attempts})
         state = {
             "results": {str(i): r.count for i, r in self.results.items()},
             "pending": [r.query_id for r in self.pending],
+            "attempts": attempts,
             "graph_version": self.dataset.graph_version,
             "standing": {str(s): {"count": sq.count,
                                   "graph_version": sq.graph_version,
@@ -320,9 +359,14 @@ class MatchQueueRuntime:
         """Load the last checkpoint and apply it: submitted items whose
         query_id the checkpoint records as completed are pulled out of
         `pending` and their counts seeded into `results`, so a
-        subsequent `run()` (batched or not) never recounts them. Call after
-        re-`submit()`ing the same workload. Returns the raw checkpoint state
-        (or None when there is no checkpoint).
+        subsequent `run()` (batched or not) never recounts them. Items the
+        checkpoint records as permanently failed (null count) are seeded
+        back as failed — their retry budget was spent before the restart
+        and does not refresh, so a poison query burns `max_attempts` once
+        over the service's whole lifetime, not per restart. Items still
+        pending get their recorded `attempts` restored for the same
+        reason. Call after re-`submit()`ing the same workload. Returns the
+        raw checkpoint state (or None when there is no checkpoint).
 
         A checkpoint whose recorded `graph_version` differs from the live
         dataset's is rejected with ValueError instead of silently re-serving
@@ -340,14 +384,20 @@ class MatchQueueRuntime:
                 f"the live dataset is at {self.dataset.graph_version}; its "
                 f"counts are stale — re-run the workload instead of "
                 f"restoring")
-        completed = {int(i): c for i, c in state.get("results", {}).items()
-                     if c is not None}
-        if completed:
+        finished = {int(i): c for i, c in state.get("results", {}).items()}
+        attempts = {int(i): int(a)
+                    for i, a in state.get("attempts", {}).items()}
+        if finished or attempts:
             still_pending = deque()
             for item in self.pending:
-                if item.query_id in completed:
-                    item.count = completed[item.query_id]
+                item.attempts = attempts.get(item.query_id, item.attempts)
+                if item.query_id in finished:
+                    item.count = finished[item.query_id]
                     item.done = True
+                    if item.count is None and not item.attempts:
+                        # pre-attempts checkpoint recorded the failure but
+                        # not the spent budget; pin it so run() cannot retry
+                        item.attempts = self.max_attempts
                     self.results[item.query_id] = item
                 else:
                     still_pending.append(item)
