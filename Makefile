@@ -1,6 +1,7 @@
 .PHONY: verify test test-tier2 bench bench-baseline perf-smoke compile-bench \
 	compile-smoke batch-bench batch-smoke shard-test shard-bench \
-	shard-smoke delta-bench delta-smoke serve-bench serve-smoke docs-check
+	shard-smoke delta-bench delta-smoke serve-bench serve-smoke \
+	chaos-smoke docs-check
 
 verify:
 	bash scripts/ci.sh
@@ -64,8 +65,13 @@ serve-bench:
 serve-smoke: serve-bench
 	PYTHONPATH=src python scripts/perf_smoke.py --serve /tmp/BENCH_serve_new.json benchmarks/BENCH_serve.json
 
+# live process chaos: SIGKILL + hang injection against a real 2-worker pool
+# (zero lost, zero double-counted, pool back to size)
+chaos-smoke:
+	PYTHONPATH=src python scripts/perf_smoke.py --chaos
+
 # documentation gates: link/anchor check, README quickstart smoke, docstrings
 docs-check:
 	PYTHONPATH=src python scripts/check_docs.py README.md docs
 	PYTHONPATH=src python scripts/run_readme.py
-	PYTHONPATH=src python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming src/repro/runtime/service.py
+	PYTHONPATH=src python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming src/repro/runtime/service.py src/repro/runtime/workers.py

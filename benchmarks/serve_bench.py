@@ -19,12 +19,22 @@ dataset (shared CI workload):
     dies at dispatch 1 with a bucket in flight, the hardest point);
     recovery wall time is measured and the final counts must be
     bit-identical to the oracle with zero lost / double-counted queries.
+  * **pool recovery** — the workload is drained once more through a
+    2-worker out-of-process executor pool while
+    `FaultInjector(kill_worker_at={1})` SIGKILLs the real worker process
+    executing dispatch 1 mid-bucket; the drain must reproduce the oracle
+    counts bit-identically (zero lost / double-counted), and the pool
+    must respawn back to its configured size.
 
 Rows:
   serve.<ds>.p50      us = p50 latency   derived qps/offered/completed/
                                          shed/failed/shed_rate
   serve.<ds>.p99      us = p99 latency
   serve.<ds>.recovery us = recovery time derived match/restarts/completed
+  serve.<ds>.poolrecovery
+                      us = pool drain    derived pool_match/pool_workers/
+                           wall time     pool_kills/pool_respawned/
+                                         pool_recovered
 
   PYTHONPATH=src python -m benchmarks.serve_bench                 # print CSV
   PYTHONPATH=src python -m benchmarks.serve_bench --json [PATH]   # + JSON
@@ -32,7 +42,8 @@ Rows:
 
 `scripts/perf_smoke.py --serve` gates the accounting identity
 (offered == completed + shed + failed), the shed rate at half capacity,
-and exact recovery against the committed benchmarks/BENCH_serve.json.
+exact supervised recovery, and exact pool recovery (worker SIGKILL
+mid-bucket) against the committed benchmarks/BENCH_serve.json.
 """
 from __future__ import annotations
 
@@ -103,6 +114,39 @@ def serve_dataset(name, data, queries, *, n_requests=N_REQUESTS, seed=0):
     finally:
         if os.path.exists(path):
             os.unlink(path)
+
+    # pool recovery: a REAL worker process is SIGKILLed mid-bucket while a
+    # 2-worker out-of-process pool drains the same workload; the drain must
+    # reproduce the oracle exactly (zero lost / double-counted) and the
+    # pool must respawn back to size
+    t0 = time.perf_counter()
+    pcfg = ServiceConfig(workers=2, bucket_size=max(2, len(queries) // 3),
+                         retry_backoff_s=0.01,
+                         inbox_capacity=max(64, len(queries)))
+    with MatchService(data, config=pcfg) as psvc:
+        # generous request deadlines: worker boot (spawn + jax import +
+        # cold compiles) and the injected kill/retry must not push queued
+        # requests past a client latency budget — the row gates loss /
+        # duplication / respawn, not latency
+        ptickets = [psvc.submit(q, limit=LIMIT, max_steps=None,
+                                deadline_s=600.0, force=True)
+                    for q in queries]
+        pcounts = psvc.drain(injector=FaultInjector(kill_worker_at={1}))
+        pool_s = time.perf_counter() - t0
+        deadline = time.monotonic() + 120.0
+        while (psvc.pool.alive_count() < psvc.pool.size
+               and time.monotonic() < deadline):
+            psvc.pool.poll(0.05)
+        pool_match = int([pcounts[t.request_id] for t in ptickets] == oracle
+                         and psvc.stats["completed"] == len(queries)
+                         and psvc.stats["failed"] == 0)
+        pool_recovered = int(psvc.pool.alive_count() == psvc.pool.size)
+        rows.append(bench_row(
+            f"serve.{name}.poolrecovery", max(pool_s, 1e-9),
+            f"pool_match={pool_match};pool_workers={psvc.pool.size}"
+            f";pool_kills={psvc.pool.stats['chaos_kills']}"
+            f";pool_respawned={psvc.pool.stats['respawned']}"
+            f";pool_recovered={pool_recovered}"))
     return rows
 
 

@@ -56,6 +56,9 @@ python -m benchmarks.serve_bench --json "$serve_json"
 echo "== serve smoke (accounting/shed/recovery invariant gate) =="
 python scripts/perf_smoke.py --serve "$serve_json" benchmarks/BENCH_serve.json
 
+echo "== chaos smoke (worker SIGKILL + hang injection, live pool) =="
+python scripts/perf_smoke.py --chaos
+
 echo "== shard differential (4 forced host devices) =="
 # sharded == sequential == ref across the strategy workloads; runs in its
 # own process because the device count must be fixed before jax loads
@@ -77,4 +80,4 @@ echo "== docs: README quickstart executes =="
 python scripts/run_readme.py
 
 echo "== docs: public-surface docstring gate =="
-python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming src/repro/runtime/service.py
+python scripts/check_docstrings.py src/repro/api src/repro/core/scheduler.py src/repro/streaming src/repro/runtime/service.py src/repro/runtime/workers.py

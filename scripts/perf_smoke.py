@@ -10,22 +10,41 @@ Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --shard NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --delta NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --serve NEW.json [BASELINE.json]
+       python scripts/perf_smoke.py --chaos
 
 Serve mode: both files are `benchmarks.serve_bench --json` outputs (rows
-serve.<ds>.p50 / serve.<ds>.p99 / serve.<ds>.recovery — open-loop latency
-percentiles at LOAD_FACTOR x the same host's measured warm capacity, plus
-supervised crash-recovery time). Unlike the other modes there is no
-timing ratio to gate: every gated property is an exact machine-independent
-invariant read from each row's derived fields. Per dataset the gate
-requires (1) the accounting identity offered == completed + shed + failed
-— the admission path may refuse work but can never lose or double-count
-it; (2) shed_rate <= SERVE_SHED_MAX while offered load sits at half the
-measured capacity — a healthy service under moderate load serves, it
-doesn't shed; (3) recovery match == 1 — after an injected executor death
-mid-drain the supervised restart reproduced the oracle counts
-bit-identically with the expected single restart. Committed-baseline p99
-and recovery times print for context only (wall clock is host-dependent
-and not gated).
+serve.<ds>.p50 / serve.<ds>.p99 / serve.<ds>.recovery /
+serve.<ds>.poolrecovery — open-loop latency percentiles at LOAD_FACTOR x
+the same host's measured warm capacity, supervised crash-recovery time,
+and out-of-process pool recovery from a real worker SIGKILL). Unlike the
+other modes there is no timing ratio to gate: every gated property is an
+exact machine-independent invariant read from each row's derived fields.
+Per dataset the gate requires (1) the accounting identity offered ==
+completed + shed + failed — the admission path may refuse work but can
+never lose or double-count it; (2) shed_rate <= SERVE_SHED_MAX while
+offered load sits at half the measured capacity — a healthy service under
+moderate load serves, it doesn't shed; (3) recovery match == 1 — after an
+injected executor death mid-drain the supervised restart reproduced the
+oracle counts bit-identically with the expected single restart; (4)
+pool_match == 1 and pool_recovered == 1 — a workers>1 drain in which a
+real worker process was SIGKILLed mid-bucket still reproduced the oracle
+bit-identically with zero lost / double-counted requests, and the pool
+respawned back to its configured size. A dataset with no poolrecovery
+row fails the gate (the bench must exercise the pool path).
+Committed-baseline p99 and recovery times print for context only (wall
+clock is host-dependent and not gated).
+
+Chaos mode (`--chaos`, no file arguments): instead of reading committed
+bench JSON, run a live seeded process-chaos scenario on a small synthetic
+graph — a 2-worker out-of-process pool drains a fixed workload while a
+FaultInjector SIGKILLs the worker executing dispatch 1 and wedges the
+worker at a later dispatch past its wall-clock deadline (watchdog kill).
+Gated invariants, all exact: final counts bit-identical to the
+sequential oracle (zero lost), completed == offered with zero failures
+(exactly-once — a double-finalized request would overcount `completed`),
+at least one chaos kill AND one watchdog kill actually fired, and the
+pool recovered to its configured size. Wall time prints for context
+only. This is the `make chaos-smoke` entry point.
 
 Delta mode: both files are `benchmarks.delta_bench --json` outputs (rows
 delta.<ds>.full / delta.<ds>.delta — per-update cost of keeping standing
@@ -258,6 +277,16 @@ def main_serve(new_path: str, base_path: str) -> int:
         if int(f.get("match", 0)) != 1:
             problems.append(f"recovery mismatch (match={f.get('match')}, "
                             f"restarts={f.get('restarts')})")
+        if "pool_match" not in f:
+            problems.append("poolrecovery row missing (bench must run a "
+                            "workers>1 drain with a worker SIGKILL)")
+        elif (int(f.get("pool_match", 0)) != 1
+                or int(f.get("pool_recovered", 0)) != 1):
+            problems.append(
+                f"pool recovery broken (pool_match={f.get('pool_match')}, "
+                f"pool_recovered={f.get('pool_recovered')}, "
+                f"pool_kills={f.get('pool_kills')}, "
+                f"pool_respawned={f.get('pool_respawned')})")
         ctx = ""
         if ds in base:
             ctx = (f" (baseline p99 {base[ds].get('p99_us', 0.0):.0f}us, "
@@ -267,8 +296,76 @@ def main_serve(new_path: str, base_path: str) -> int:
         print(f"perf-smoke: serve {ds}: p99 {f.get('p99_us', 0.0):.0f}us "
               f"qps={f.get('qps', '?')} shed_rate={shed_rate:.3f} "
               f"recovery {f.get('recovery_us', 0.0):.0f}us "
-              f"restarts={f.get('restarts', '?')}{ctx} {verdict}")
+              f"restarts={f.get('restarts', '?')} "
+              f"pool_kills={f.get('pool_kills', '?')}"
+              f"/respawned={f.get('pool_respawned', '?')}{ctx} {verdict}")
     return 1 if failed else 0
+
+
+def main_chaos() -> int:
+    """Live seeded process-chaos smoke (see module docstring): SIGKILL +
+    hang injection against a real 2-worker pool, exact-count invariants.
+    Needs PYTHONPATH=src (imports repro lazily so the bench-JSON modes
+    stay import-free)."""
+    import time
+
+    from repro.core import random_walk_query, synthetic_labeled_graph
+    from repro.core.ref_engine import cemr_match
+    from repro.runtime.ft import FaultInjector
+    from repro.runtime.service import MatchService, ServiceConfig
+
+    data = synthetic_labeled_graph(60, 5.0, 3, seed=0, power_law=False)
+    queries = [random_walk_query(data, 4, seed=s) for s in range(8)]
+    oracle = [cemr_match(q, data, limit=10**9).count for q in queries]
+    # 8 queries / bucket_size 2 -> dispatches 0..3 (+ retries): kill the
+    # worker executing dispatch 1, wedge dispatch 3 past the 5s deadline
+    cfg = ServiceConfig(workers=2, bucket_size=2, worker_deadline_s=5.0,
+                        retry_backoff_s=0.01)
+    inj = FaultInjector(kill_worker_at={1}, hang_at={3: 60.0})
+    t0 = time.perf_counter()
+    problems = []
+    with MatchService(data, config=cfg) as svc:
+        # generous request deadlines: the gate is on loss/duplication and
+        # pool recovery, not on client-side latency budgets
+        tickets = [svc.submit(q, limit=10**9, max_steps=None,
+                              deadline_s=600.0, force=True)
+                   for q in queries]
+        counts = svc.drain(injector=inj)
+        wall_s = time.perf_counter() - t0
+        got = [counts[t.request_id] for t in tickets]
+        if got != oracle:
+            problems.append(f"counts diverged: {got} != {oracle}")
+        if svc.stats["completed"] != len(queries):
+            problems.append(f"not exactly-once: completed "
+                            f"{svc.stats['completed']} != {len(queries)}")
+        if svc.stats["failed"] or svc.stats["shed_expired"]:
+            problems.append(f"lost requests: failed={svc.stats['failed']} "
+                            f"shed_expired={svc.stats['shed_expired']}")
+        if svc.pool.stats["chaos_kills"] < 1:
+            problems.append("chaos kill never fired")
+        if svc.pool.stats["watchdog_kills"] < 1:
+            problems.append("watchdog kill never fired")
+        deadline = time.monotonic() + 120.0
+        while (svc.pool.alive_count() < svc.pool.size
+               and time.monotonic() < deadline):
+            svc.pool.poll(0.05)
+        if svc.pool.alive_count() != svc.pool.size:
+            problems.append(f"pool did not recover "
+                            f"({svc.pool.alive_count()}/{svc.pool.size})")
+        print(f"perf-smoke: chaos: {len(queries)} queries in {wall_s:.1f}s, "
+              f"completed={svc.stats['completed']} "
+              f"reissued={svc.stats['reissued']} "
+              f"chaos_kills={svc.pool.stats['chaos_kills']} "
+              f"watchdog_kills={svc.pool.stats['watchdog_kills']} "
+              f"respawned={svc.pool.stats['respawned']} "
+              f"alive={svc.pool.alive_count()}/{svc.pool.size}")
+    if problems:
+        for p in problems:
+            print(f"perf-smoke: chaos FAIL: {p}")
+        return 1
+    print("perf-smoke: chaos ok (zero lost, zero double-counted, "
+          "pool back to size)")
+    return 0
 
 
 def main_delta(new_path: str, base_path: str) -> int:
@@ -433,6 +530,8 @@ def main_compile(new_path: str, base_path: str) -> int:
 
 
 def main() -> int:
+    if "--chaos" in sys.argv[1:]:
+        return main_chaos()
     args = [a for a in sys.argv[1:]
             if a not in ("--compile", "--batch", "--shard", "--delta",
                          "--serve")]

@@ -57,7 +57,10 @@ def serve_match_loop(args) -> None:
     earlier ones finished, so under overload the admission controller
     sheds with a typed Overloaded ticket instead of queueing without
     bound. Prints the open-loop summary (sustained qps, p50/p99 latency,
-    shed rate) plus service counters."""
+    shed rate) plus service counters. `--workers N` executes buckets on N
+    out-of-process workers (crash/hang isolation — a wedged or killed
+    worker costs one bucket retry, not the service) and reports the pool's
+    lifecycle counters alongside the service stats."""
     from repro.api import Dataset, MatchOptions
     from repro.runtime.service import (MatchService, ServiceConfig,
                                        arrival_schedule, open_loop)
@@ -66,24 +69,31 @@ def serve_match_loop(args) -> None:
     queries = [dataset.random_query(args.query_size, seed=s)
                for s in range(min(args.n_queries, 16))]
     svc = MatchService(dataset, config=ServiceConfig(
-        inbox_capacity=max(64, args.n_queries)),
+        inbox_capacity=max(64, args.n_queries), workers=args.workers),
         options=MatchOptions(engine=args.engine, limit=args.limit))
-    # warm the plan caches so the measured loop isn't dominated by compiles
-    for q in queries:
-        svc.submit(q, limit=args.limit, force=True)
-    svc.drain()
-    svc.reset_stats()
-    workload = [dict(query=queries[i % len(queries)], limit=args.limit)
-                for i in range(args.n_queries)]
-    schedule = arrival_schedule(args.n_queries, args.qps, seed=args.seed)
-    s = open_loop(svc, workload, schedule)
-    print(f"open loop vs {dataset!r}: offered {s['offered']} @ "
-          f"{args.qps:.1f} qps → completed {s['completed']} "
-          f"shed {s['shed']} failed {s['failed']} "
-          f"(sustained {s['qps_sustained']:.1f} qps)")
-    print(f"latency p50 {s['p50_s'] * 1e3:.1f}ms p99 {s['p99_s'] * 1e3:.1f}ms "
-          f"shed_rate {s['shed_rate']:.3f} makespan {s['makespan_s']:.2f}s")
-    print(f"service stats: {svc.stats}")
+    try:
+        # warm the plan caches so the measured loop isn't dominated by
+        # compiles (with a pool this warms the workers' caches too)
+        for q in queries:
+            svc.submit(q, limit=args.limit, force=True)
+        svc.drain()
+        svc.reset_stats()
+        workload = [dict(query=queries[i % len(queries)], limit=args.limit)
+                    for i in range(args.n_queries)]
+        schedule = arrival_schedule(args.n_queries, args.qps, seed=args.seed)
+        s = open_loop(svc, workload, schedule)
+        print(f"open loop vs {dataset!r}: offered {s['offered']} @ "
+              f"{args.qps:.1f} qps → completed {s['completed']} "
+              f"shed {s['shed']} failed {s['failed']} "
+              f"(sustained {s['qps_sustained']:.1f} qps)")
+        print(f"latency p50 {s['p50_s'] * 1e3:.1f}ms "
+              f"p99 {s['p99_s'] * 1e3:.1f}ms "
+              f"shed_rate {s['shed_rate']:.3f} makespan {s['makespan_s']:.2f}s")
+        print(f"service stats: {svc.stats}")
+        if svc.pool is not None:
+            print(f"worker pool ({svc.pool.size} workers): {svc.pool.stats}")
+    finally:
+        svc.close()
 
 
 def main():
@@ -106,6 +116,9 @@ def main():
                          "control instead of a single closed-loop batch")
     ap.add_argument("--qps", type=float, default=50.0,
                     help="offered arrival rate for --serve-loop")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="out-of-process executor workers for --serve-loop "
+                         "(0 = inline execution in the service process)")
     ap.add_argument("--seed", type=int, default=0,
                     help="arrival-schedule seed for --serve-loop")
     args = ap.parse_args()

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 from collections import deque
@@ -32,8 +33,12 @@ from collections import deque
 from repro.api import BATCH_MODES, Dataset, Matcher, MatchOptions
 from repro.core.graph import Graph
 
+from .workers import WorkerPool, as_triples
+
 __all__ = ["QueryItem", "StandingQuery", "MatchQueueRuntime",
-           "execute_chunk"]
+           "execute_chunk", "write_checkpoint", "read_checkpoint"]
+
+logger = logging.getLogger("repro.runtime")
 
 
 @dataclasses.dataclass
@@ -132,22 +137,89 @@ def execute_chunk(matcher: Matcher, chunk: list, *, batch: str = "auto",
     return results
 
 
+# ------------------------------------------------------------- checkpoint I/O
+def write_checkpoint(path: str, state: dict) -> None:
+    """Atomically persist `state` as JSON (tmp + `os.replace`), keeping the
+    outgoing live file as a `.prev` generation. The live file is itself
+    written atomically, so `.prev` exists for *external* corruption — a
+    disk fault, a torn write below the filesystem's atomicity, an operator
+    truncating the file — which `read_checkpoint` recovers from instead of
+    taking the whole service down with a JSON parse error."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(state, f)
+    if os.path.exists(path):
+        try:
+            os.replace(path, path + ".prev")
+        except OSError:
+            pass                   # fallback generation is best-effort
+    os.replace(tmp, path)
+
+
+def read_checkpoint(path: str | None) -> tuple[dict | None, bool]:
+    """Read a checkpoint written by `write_checkpoint`, falling back to
+    the `.prev` generation when the live file is truncated or corrupt.
+    Returns `(state, fell_back)`:
+
+      * `(state, False)` — live file read cleanly;
+      * `(state, True)`  — live file was unreadable (or lost mid-rotate);
+        the previous generation was restored instead, with a logged
+        warning — callers bump their `restore_fallbacks` stat;
+      * `(None, True)`   — every generation unreadable: treated as *no*
+        checkpoint rather than a crash, so corruption degrades durability
+        (the workload re-runs), never availability;
+      * `(None, False)`  — no checkpoint exists.
+    """
+    if not path:
+        return None, False
+    saw_any = False
+    for p, is_prev in ((path, False), (path + ".prev", True)):
+        if not os.path.exists(p):
+            continue
+        saw_any = True
+        try:
+            with open(p) as f:
+                state = json.load(f)
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            logger.warning(
+                "checkpoint %s is truncated or corrupt (%s); %s", p, e,
+                "falling back to the .prev generation" if not is_prev
+                else "no readable generation remains — restarting the "
+                     "workload from scratch")
+            continue
+        if is_prev:
+            logger.warning("restored checkpoint from previous generation "
+                           "%s", p)
+        return state, is_prev
+    return None, saw_any
+
+
 class MatchQueueRuntime:
     """Queue of queries over a shared data graph. `n_executors` simulates the
     pod-level workers; each executor processes one query item at a time
-    (within an item, the engine tiles the frontier)."""
+    (within an item, the engine tiles the frontier).
+
+    With `workers > 0` chunks execute on a `repro.runtime.workers.WorkerPool`
+    of out-of-process executors instead of the in-process Matcher: a worker
+    that crashes, hangs past `worker_deadline_s`, or is OOM-killed loses only
+    its own chunk (re-issued under the normal `attempts` budget) while the
+    runtime survives. Close the runtime (`close()` / context manager) to
+    reap the worker processes."""
 
     def __init__(self, data: Graph | Dataset, *, encoding: str = "cost",
                  engine: str = "vector", tile_rows: int = 2048,
                  deadline_s: float = 120.0, max_attempts: int = 3,
-                 state_path: str | None = None, plan_cache_size: int = 256):
+                 state_path: str | None = None, plan_cache_size: int = 256,
+                 workers: int = 0, worker_deadline_s: float = 120.0):
         self.dataset = (data if isinstance(data, Dataset)
                         else Dataset.from_graph(data))
-        self.matcher = Matcher(
-            self.dataset,
-            MatchOptions(engine=engine, encoding=encoding,
-                         tile_rows=tile_rows),
-            plan_cache_size=plan_cache_size)
+        self.options = MatchOptions(engine=engine, encoding=encoding,
+                                    tile_rows=tile_rows)
+        self.matcher = Matcher(self.dataset, self.options,
+                               plan_cache_size=plan_cache_size)
+        self.pool = (WorkerPool(self.dataset, workers, self.options,
+                                deadline_s=worker_deadline_s)
+                     if workers else None)
         self.deadline_s = deadline_s
         self.max_attempts = max_attempts
         self.state_path = state_path
@@ -157,8 +229,19 @@ class MatchQueueRuntime:
         self._next_standing_id = 0
         self.stats = {"reissued": 0, "stragglers": 0, "failed": 0,
                       "completed": 0, "checkpoints": 0, "cache_hits": 0,
-                      "deltas_applied": 0, "delta_fallbacks": 0,
-                      "delta_inexact": 0}
+                      "restore_fallbacks": 0, "deltas_applied": 0,
+                      "delta_fallbacks": 0, "delta_inexact": 0}
+
+    def close(self) -> None:
+        """Reap the worker pool (no-op without one). Idempotent."""
+        if self.pool is not None:
+            self.pool.close()
+
+    def __enter__(self) -> "MatchQueueRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def submit(self, queries: list[Graph], *, limit: int = 1_000_000,
                max_steps: int | None = 50_000) -> None:
@@ -202,21 +285,26 @@ class MatchQueueRuntime:
                     # with a fresh retry budget
                     continue
                 item.attempts += 1
-                # compile before the failure point: the plan lives in the
-                # shared Matcher, so a re-issued attempt starts from the
-                # cache. cache_hits counts attempts whose plan was already
-                # compiled (re-issues and duplicate workload queries). A
-                # compile-phase fault consumes this attempt and re-issues,
-                # like any other executor death.
-                hits_before = self.matcher.cache_info().hits
-                try:
-                    self.matcher.compile(item.query)
-                except Exception:     # noqa: BLE001
-                    self._requeue(item)
-                    processed += 1
-                    continue
-                self.stats["cache_hits"] += (self.matcher.cache_info().hits
-                                             - hits_before)
+                if self.pool is None:
+                    # compile before the failure point: the plan lives in
+                    # the shared Matcher, so a re-issued attempt starts
+                    # from the cache. cache_hits counts attempts whose
+                    # plan was already compiled (re-issues and duplicate
+                    # workload queries). A compile-phase fault consumes
+                    # this attempt and re-issues, like any other executor
+                    # death. With a worker pool the plan caches live in
+                    # the workers (the whole point: a poison compile
+                    # crashes a worker, not this process), so compilation
+                    # and cache accounting happen there instead.
+                    hits_before = self.matcher.cache_info().hits
+                    try:
+                        self.matcher.compile(item.query)
+                    except Exception:     # noqa: BLE001
+                        self._requeue(item)
+                        processed += 1
+                        continue
+                    self.stats["cache_hits"] += (
+                        self.matcher.cache_info().hits - hits_before)
                 if fail_hook is not None:
                     try:
                         fail_hook(item)   # test hook: simulated node death
@@ -254,8 +342,16 @@ class MatchQueueRuntime:
         return {i: r.count for i, r in sorted(self.results.items())}
 
     def _exec_chunk(self, chunk: list[QueryItem], batch: str):
-        """Execute one drained chunk through the shared `execute_chunk`
-        helper; returns [(item, outcome | None, elapsed_s)]."""
+        """Execute one drained chunk; returns [(item, outcome | None,
+        elapsed_s)]. Inline this goes through the shared `execute_chunk`
+        helper; with a worker pool the chunk crosses the process boundary
+        via `WorkerPool.run_sync` (workers always superbatch with
+        `batch="auto"`), a dead/hung worker surfacing as outcome None on
+        every item so `_requeue` re-issues under the attempts budget."""
+        if self.pool is not None:
+            res = self.pool.run_sync(chunk)
+            self.stats["cache_hits"] += res.cache_hits
+            return as_triples(res)
         return execute_chunk(self.matcher, chunk, batch=batch)
 
     def _requeue(self, item: QueryItem) -> None:
@@ -349,10 +445,7 @@ class MatchQueueRuntime:
                                   "inexact": sq.inexact}
                          for s, sq in self.standing.items()},
         }
-        tmp = self.state_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(state, f)
-        os.replace(tmp, self.state_path)
+        write_checkpoint(self.state_path, state)
         self.stats["checkpoints"] += 1
 
     def restore(self) -> dict | None:
@@ -372,11 +465,17 @@ class MatchQueueRuntime:
         dataset's is rejected with ValueError instead of silently re-serving
         stale counts — every count in it was taken against a graph that no
         longer exists. (Checkpoints from before the streaming subsystem
-        carry no version and are accepted as version 0.)"""
-        if not self.state_path or not os.path.exists(self.state_path):
+        carry no version and are accepted as version 0.)
+
+        A truncated/corrupt state file is not fatal: `read_checkpoint`
+        falls back to the `.prev` generation (bumping
+        `stats["restore_fallbacks"]`), and with no readable generation
+        at all the restore is a no-op — the workload simply re-runs."""
+        state, fell_back = read_checkpoint(self.state_path)
+        if fell_back:
+            self.stats["restore_fallbacks"] += 1
+        if state is None:
             return None
-        with open(self.state_path) as f:
-            state = json.load(f)
         ckpt_version = int(state.get("graph_version", 0))
         if ckpt_version != self.dataset.graph_version:
             raise ValueError(

@@ -31,22 +31,29 @@ preprocessed `Dataset` and serves an open-loop request stream:
   * **Tenant isolation** — each tenant gets its own `Matcher.tenant_view`
     (private plan cache + stats over the shared Dataset), so one tenant's
     cold-query storm can never evict another tenant's warm plans.
+  * **Process isolation** — with `ServiceConfig(workers > 0)` buckets
+    execute on a `repro.runtime.workers.WorkerPool` of out-of-process
+    executors instead of inline: a worker that crashes, wedges past
+    `worker_deadline_s` (SIGKILLed by the pool watchdog), or is OOM-killed
+    loses only its in-flight bucket, which retries under the `attempts`
+    budget with exponential backoff + jitter and degrades `vector → ref`
+    after `degrade_after` failed attempts before being declared poison.
 
 Semantics, SLO knobs, and the recovery argument: docs/serving.md.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 import random
 import time
+import zlib
 from collections import deque
 
 from repro.api import Dataset, Matcher, MatchOptions
 from repro.core.graph import Graph
 
-from .queue import execute_chunk
+from .queue import execute_chunk, read_checkpoint, write_checkpoint
+from .workers import WorkerPool, as_triples
 
 __all__ = ["PRIORITIES", "ServiceConfig", "MatchRequest", "Admitted",
            "Overloaded", "RequestResult", "MatchService",
@@ -71,7 +78,20 @@ class ServiceConfig:
     `prior_service_s` seeds the trailing service-time estimate before any
     request has completed; `checkpoint_every` (completed requests) gates
     periodic checkpoints — pre-bucket in-flight checkpoints always happen
-    when a `state_path` is set."""
+    when a `state_path` is set.
+
+    Process isolation (docs/serving.md#process-isolation--failure-domains):
+    `workers` > 0 executes buckets on that many out-of-process workers;
+    `worker_deadline_s` is the per-bucket wall-clock budget after which the
+    pool watchdog SIGKILLs the executing worker; `poll_interval_s` bounds
+    how long an idle `step()` blocks waiting for pool results. A bucket
+    whose worker died retries after `retry_backoff_s · 2^(attempts−1)`
+    seconds (seeded-jittered, capped at `retry_backoff_max_s`), degrading
+    from `engine="vector"` to `"ref"` once `degrade_after` attempts have
+    failed. Shed backoff: repeated `Overloaded` responses to the same
+    tenant grow `retry_after_s` geometrically from the admission estimate
+    (jitter seeded per tenant from `backoff_seed`, capped at
+    `retry_after_max_s`, reset by an accepted submit)."""
 
     inbox_capacity: int = 256
     bucket_size: int = 8
@@ -86,6 +106,15 @@ class ServiceConfig:
     deadlines_s: tuple[tuple[str, float], ...] = (
         ("interactive", 0.5), ("standard", 5.0), ("batch", 60.0))
     tenant_plan_cache_size: int = 128
+    workers: int = 0
+    worker_deadline_s: float = 30.0
+    poll_interval_s: float = 0.05
+    degrade_after: int = 2
+    retry_backoff_s: float = 0.05
+    retry_backoff_max_s: float = 2.0
+    retry_after_base_s: float = 0.05
+    retry_after_max_s: float = 5.0
+    backoff_seed: int = 0
 
     def __post_init__(self):
         if self.inbox_capacity < 1:
@@ -94,6 +123,10 @@ class ServiceConfig:
             raise ValueError("bucket_size must be >= 1")
         if self.max_attempts < 1:
             raise ValueError("max_attempts must be >= 1")
+        if self.workers < 0:
+            raise ValueError("workers must be >= 0 (0 = inline execution)")
+        if self.degrade_after < 1:
+            raise ValueError("degrade_after must be >= 1")
         if set(dict(self.deadlines_s)) != set(PRIORITIES):
             raise ValueError(f"deadlines_s must cover exactly {PRIORITIES}")
 
@@ -119,6 +152,13 @@ class MatchRequest:
     arrival_s: float
     deadline_at: float
     attempts: int = 0
+    # per-request engine override, set by the degradation ladder (None =
+    # the service's configured engine); persists across checkpoints so a
+    # restart never un-degrades a request back onto the faulting engine
+    engine: str | None = None
+    # retry-backoff eligibility: not dispatched before this clock time
+    # (force-mode drain ignores it — backoff shapes load, not correctness)
+    not_before: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,7 +177,11 @@ class Overloaded:
     `"inbox_full"` (bounded inbox at capacity) or `"deadline_budget"`
     (queue depth × trailing service time exceeds the request's deadline
     budget — it would time out before an executor reached it).
-    `retry_after_s` is the backoff hint derived from the same estimate."""
+    `retry_after_s` is the backoff hint: the admission estimate grown
+    geometrically with the tenant's consecutive-shed streak and jittered
+    by a per-tenant seeded rng, so a fleet of open-loop clients shed
+    together does not retry in lockstep (it resets when a submit from
+    the tenant is accepted)."""
 
     request_id: int
     reason: str
@@ -152,7 +196,9 @@ class RequestResult:
     (`ok=True`, `count` set), shed in queue (`shed=True` — its deadline
     expired before dispatch), or permanently failed (`failed=True` —
     retry budget burned). `deadline_missed` flags completions that beat
-    no one's SLO (first-result-wins: the count is still recorded)."""
+    no one's SLO (first-result-wins: the count is still recorded).
+    `engine` is the per-request degradation override the terminal attempt
+    ran under (None = the service's configured engine)."""
 
     request_id: int
     tenant: str
@@ -164,6 +210,7 @@ class RequestResult:
     latency_s: float = 0.0
     deadline_missed: bool = False
     attempts: int = 0
+    engine: str | None = None
 
 
 def _tenant_stats() -> dict:
@@ -196,6 +243,10 @@ class MatchService:
                 self.dataset, self.options,
                 plan_cache_size=self.config.tenant_plan_cache_size,
                 tenant="default")}
+        self.pool = (WorkerPool(self.dataset, self.config.workers,
+                                self.options,
+                                deadline_s=self.config.worker_deadline_s)
+                     if self.config.workers else None)
         self._queues: dict[str, deque[MatchRequest]] = {
             p: deque() for p in PRIORITIES}
         self._skipped: dict[str, int] = {p: 0 for p in PRIORITIES}
@@ -205,11 +256,28 @@ class MatchService:
         self._service_times: deque[float] = deque(
             maxlen=self.config.rate_window)
         self._completed_since_ckpt = 0
+        self._retry_rng = random.Random(self.config.backoff_seed)
+        self._shed_streak: dict[str, int] = {}
+        self._shed_rng: dict[str, random.Random] = {}
         self.stats = {"admitted": 0, "shed_admission": 0, "shed_expired": 0,
                       "completed": 0, "failed": 0, "reissued": 0,
                       "stragglers": 0, "dispatches": 0, "checkpoints": 0,
-                      "cache_hits": 0, "deadline_missed": 0}
+                      "cache_hits": 0, "deadline_missed": 0, "degraded": 0,
+                      "restore_fallbacks": 0}
         self.tenant_stats: dict[str, dict] = {}
+
+    def close(self) -> None:
+        """Reap the worker pool (no-op in inline mode). Idempotent — and
+        required whenever `workers > 0`, or worker processes outlive the
+        service object until interpreter teardown."""
+        if self.pool is not None:
+            self.pool.close()
+
+    def __enter__(self) -> "MatchService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------- utilities
     def matcher_for(self, tenant: str) -> Matcher:
@@ -287,7 +355,9 @@ class MatchService:
                     count=None, ok=False, shed=True)
                 return Overloaded(request_id=rid, reason=reason,
                                   queue_depth=depth, est_wait_s=est_wait,
-                                  retry_after_s=max(est_wait, 0.001))
+                                  retry_after_s=self._retry_after(
+                                      tenant, est_wait))
+        self._shed_streak[tenant] = 0     # accepted: reset the shed backoff
         req = MatchRequest(request_id=rid, tenant=tenant, priority=priority,
                            query=query, limit=limit, max_steps=max_steps,
                            deadline_s=budget, arrival_s=now,
@@ -296,6 +366,25 @@ class MatchService:
         self.stats["admitted"] += 1
         ts["admitted"] += 1
         return Admitted(request_id=rid, est_wait_s=est_wait)
+
+    def _retry_after(self, tenant: str, est_wait: float) -> float:
+        """The `Overloaded.retry_after_s` hint: exponential per-tenant
+        backoff with seeded jitter. The base is the admission wait
+        estimate (floored at `retry_after_base_s`), doubled per
+        consecutive shed for this tenant and jittered into [0.5×, 1.5×]
+        by a per-tenant rng seeded from (tenant, `backoff_seed`) — so
+        shed clients de-synchronize deterministically, and repeated
+        hammering by one tenant is pushed back geometrically (capped at
+        `retry_after_max_s`) until one of its submits is accepted."""
+        streak = self._shed_streak.get(tenant, 0) + 1
+        self._shed_streak[tenant] = streak
+        rng = self._shed_rng.get(tenant)
+        if rng is None:
+            rng = self._shed_rng[tenant] = random.Random(
+                zlib.crc32(tenant.encode()) ^ self.config.backoff_seed)
+        base = max(est_wait, self.config.retry_after_base_s)
+        raw = base * (2.0 ** (streak - 1)) * (0.5 + rng.random())
+        return min(raw, self.config.retry_after_max_s)
 
     # ------------------------------------------------------------ scheduling
     def _shed_expired(self, now: float) -> int:
@@ -336,19 +425,26 @@ class MatchService:
         return nonempty[0]
 
     def _take_bucket(self, now: float, force: bool):
-        """Select the next dispatch bucket (same class, tenant, and
-        limit/budget, up to `bucket_size` requests) — or None when the
-        partially-filled head bucket still has deadline headroom to wait
-        for more arrivals (never when `force`). Selection commits: chosen
-        requests leave their queue and the starvation counters advance."""
+        """Select the next dispatch bucket (same class, tenant,
+        limit/budget, and degradation engine, up to `bucket_size`
+        requests) — or None when the partially-filled head bucket still
+        has deadline headroom to wait for more arrivals (never when
+        `force`). Requests inside their retry-backoff window
+        (`not_before` in the future) are not eligible unless `force` — a
+        drain flushes everything, backoff only spaces retries out under
+        live load. Selection commits: chosen requests leave their queue
+        and the starvation counters advance."""
         cls = self._select_class()
         if cls is None:
             return None
         q = self._queues[cls]
-        head = q[0]
-        key = (head.tenant, head.limit, head.max_steps)
-        bucket = [r for r in q
-                  if (r.tenant, r.limit, r.max_steps) == key]
+        eligible = [r for r in q if force or r.not_before <= now]
+        if not eligible:
+            return None
+        head = eligible[0]
+        key = (head.tenant, head.limit, head.max_steps, head.engine)
+        bucket = [r for r in eligible
+                  if (r.tenant, r.limit, r.max_steps, r.engine) == key]
         bucket = bucket[:self.config.bucket_size]
         if len(bucket) < self.config.bucket_size and not force:
             # flush on deadline headroom, not just on bucket size: wait
@@ -367,66 +463,58 @@ class MatchService:
         self._skipped[cls] = 0
         return bucket
 
-    def step(self, *, force: bool = False, fail_hook=None,
-             injector=None) -> int:
-        """Dispatch at most one ready bucket; returns the number of
-        requests finalized (completed + failed + shed). `force` flushes
-        partial buckets regardless of headroom (drain mode). `fail_hook`
-        is the executor-death chaos hook forwarded to `execute_chunk`;
-        `injector.check(dispatch_idx)` fires *after* the in-flight
-        checkpoint and before execution — an injected raise there is a
-        process crash with work in flight, the recovery path
-        `ServiceSupervisor` exists for."""
-        now = self._clock()
-        finalized = self._shed_expired(now)
-        bucket = self._take_bucket(now, force)
-        if bucket is None:
-            return finalized
-        for r in bucket:
-            r.attempts += 1
-            self.in_flight[r.request_id] = r
-        self.stats["dispatches"] += 1
-        if self.config.state_path:
-            # crash-consistency point: the checkpoint on disk now records
-            # this bucket as in flight; a crash during execution re-issues
-            # exactly these requests and recounts nothing else
-            self.checkpoint()
-        if injector is not None:
-            injector.check(self.stats["dispatches"] - 1)
-        matcher = self.matcher_for(bucket[0].tenant)
-        hits_before = matcher.cache_info().hits
-        t0 = time.perf_counter()
-        outs = execute_chunk(matcher, bucket, batch="auto",
-                             fail_hook=fail_hook)
-        per_item_s = (time.perf_counter() - t0) / len(bucket)
-        hit_delta = matcher.cache_info().hits - hits_before
-        self.stats["cache_hits"] += hit_delta
-        self._tstats(bucket[0].tenant)["cache_hits"] += hit_delta
-        done_now = self._clock()
+    def _fail_or_requeue(self, r: MatchRequest, now: float) -> int:
+        """One request's executor (inline hook or real worker process)
+        died on it. Under budget: re-queue at the front with an
+        exponential-backoff-with-jitter `not_before` (seeded rng, so
+        chaos runs are reproducible), degrading `vector → ref` once
+        `degrade_after` attempts failed (pool mode only — inline
+        execution has no per-request engine override). Over budget:
+        declare it poison (permanent failure). Returns 1 if finalized."""
+        if r.attempts < self.config.max_attempts:
+            if (self.pool is not None
+                    and r.attempts >= self.config.degrade_after
+                    and (r.engine or self.options.engine) == "vector"):
+                r.engine = "ref"
+                self.stats["degraded"] += 1
+            delay = min(self.config.retry_backoff_s
+                        * (2.0 ** (r.attempts - 1))
+                        * (0.5 + self._retry_rng.random()),
+                        self.config.retry_backoff_max_s)
+            r.not_before = now + delay
+            self._queues[r.priority].appendleft(r)
+            self.stats["reissued"] += 1
+            return 0
+        self.results[r.request_id] = RequestResult(
+            request_id=r.request_id, tenant=r.tenant,
+            priority=r.priority, count=None, ok=False,
+            failed=True, attempts=r.attempts,
+            latency_s=now - r.arrival_s, engine=r.engine)
+        self.stats["failed"] += 1
+        self._tstats(r.tenant)["failed"] += 1
+        return 1
+
+    def _finalize_outs(self, outs, *, now: float, per_item_s: float) -> int:
+        """Absorb one executed bucket's `execute_chunk`-shaped triples
+        into terminal results / retry queues; returns requests finalized.
+        `per_item_s` feeds the admission service-time estimate — callers
+        pass *execution* wall time (worker-measured in pool mode), never
+        dispatch round-trip, so IPC/pickling overhead cannot inflate the
+        deadline-budget shed decision."""
+        finalized = 0
         for r, out, _dt in outs:
-            del self.in_flight[r.request_id]
-            self._service_times.append(per_item_s)
+            self.in_flight.pop(r.request_id, None)
             if out is None:                       # executor died: re-issue
-                if r.attempts < self.config.max_attempts:
-                    self._queues[r.priority].appendleft(r)
-                    self.stats["reissued"] += 1
-                else:
-                    self.results[r.request_id] = RequestResult(
-                        request_id=r.request_id, tenant=r.tenant,
-                        priority=r.priority, count=None, ok=False,
-                        failed=True, attempts=r.attempts,
-                        latency_s=done_now - r.arrival_s)
-                    self.stats["failed"] += 1
-                    self._tstats(r.tenant)["failed"] += 1
-                    finalized += 1
+                finalized += self._fail_or_requeue(r, now)
                 continue
-            latency = done_now - r.arrival_s
-            missed = done_now > r.deadline_at
+            self._service_times.append(per_item_s)
+            latency = now - r.arrival_s
+            missed = now > r.deadline_at
             self.results[r.request_id] = RequestResult(
                 request_id=r.request_id, tenant=r.tenant,
                 priority=r.priority, count=out.count, ok=True,
                 latency_s=latency, deadline_missed=missed,
-                attempts=r.attempts)
+                attempts=r.attempts, engine=r.engine)
             self.stats["completed"] += 1
             ts = self._tstats(r.tenant)
             ts["completed"] += 1
@@ -438,6 +526,106 @@ class MatchService:
                 ts["deadline_missed"] += 1
             finalized += 1
             self._completed_since_ckpt += 1
+        return finalized
+
+    def _pool_collect(self, timeout: float = 0.0) -> int:
+        """Collect every finished/failed bucket from the worker pool
+        (blocking up to `timeout` for the first event — the pool's
+        watchdog and respawn logic also run inside this poll). Completed
+        buckets finalize exactly like inline execution; died/hung buckets
+        re-issue through the retry/backoff/degradation path."""
+        finalized = 0
+        for res in self.pool.poll(timeout):
+            now = self._clock()
+            if res.cache_hits:
+                self.stats["cache_hits"] += res.cache_hits
+                self._tstats(res.items[0].tenant)["cache_hits"] += \
+                    res.cache_hits
+            per_item_s = res.exec_s / max(len(res.items), 1)
+            finalized += self._finalize_outs(as_triples(res), now=now,
+                                             per_item_s=per_item_s)
+        return finalized
+
+    def step(self, *, force: bool = False, fail_hook=None,
+             injector=None) -> int:
+        """Dispatch at most one ready bucket; returns the number of
+        requests finalized (completed + failed + shed). `force` flushes
+        partial buckets regardless of headroom or retry backoff (drain
+        mode). `fail_hook` is the in-process executor-death chaos hook
+        forwarded to `execute_chunk` — incompatible with a worker pool
+        (a closure cannot cross the process boundary; use the injector's
+        `kill_worker_at`/`hang_at` for real process chaos instead).
+        `injector.check(dispatch_idx)` fires *after* the in-flight
+        checkpoint and before execution — an injected raise there is a
+        service-process crash with work in flight, the recovery path
+        `ServiceSupervisor` exists for; `injector.hang(dispatch_idx)`
+        rides the dispatched bucket into the worker (a real sleep the
+        watchdog must SIGKILL through), and `injector.kill_worker
+        (dispatch_idx)` SIGKILLs the worker right after dispatch (real
+        process death mid-bucket).
+
+        In pool mode a step first absorbs finished buckets, then
+        dispatches to an idle worker if one exists; with nothing to
+        dispatch but work still in flight it blocks up to
+        `poll_interval_s` so drain/pump loops make progress instead of
+        spinning."""
+        now = self._clock()
+        finalized = self._shed_expired(now)
+        if self.pool is not None:
+            if fail_hook is not None:
+                raise ValueError(
+                    "fail_hook simulates in-process executor death and "
+                    "cannot cross the process boundary; with workers > 0 "
+                    "use FaultInjector(kill_worker_at=..., hang_at=...) "
+                    "for real process-level chaos")
+            finalized += self._pool_collect()
+        can_dispatch = self.pool is None or self.pool.idle_count() > 0
+        bucket = self._take_bucket(now, force) if can_dispatch else None
+        if bucket is None:
+            if (self.pool is not None and self.busy()
+                    and self.pool.waiting_count()):
+                # nothing dispatchable, but buckets (or worker startups)
+                # are in flight: wait for the pool instead of spinning
+                finalized += self._pool_collect(self.config.poll_interval_s)
+            return finalized
+        for r in bucket:
+            r.attempts += 1
+            self.in_flight[r.request_id] = r
+        self.stats["dispatches"] += 1
+        if self.config.state_path:
+            # crash-consistency point: the checkpoint on disk now records
+            # this bucket as in flight; a crash during execution re-issues
+            # exactly these requests and recounts nothing else
+            self.checkpoint()
+        dispatch_idx = self.stats["dispatches"] - 1
+        if injector is not None:
+            injector.check(dispatch_idx)
+        if self.pool is not None:
+            hang_s = (injector.hang(dispatch_idx)
+                      if injector is not None else 0.0)
+            ticket = self.pool.dispatch(
+                bucket, tenant=bucket[0].tenant, engine=bucket[0].engine,
+                hang_s=hang_s)
+            if ticket is None:
+                # the chosen worker died at send time — a real worker
+                # loss: route the bucket through the normal death path
+                finalized += self._finalize_outs(
+                    [(r, None, 0.0) for r in bucket],
+                    now=self._clock(), per_item_s=0.0)
+            elif injector is not None and injector.kill_worker(dispatch_idx):
+                self.pool.kill_ticket(ticket)
+        else:
+            matcher = self.matcher_for(bucket[0].tenant)
+            hits_before = matcher.cache_info().hits
+            t0 = time.perf_counter()
+            outs = execute_chunk(matcher, bucket, batch="auto",
+                                 fail_hook=fail_hook)
+            per_item_s = (time.perf_counter() - t0) / len(bucket)
+            hit_delta = matcher.cache_info().hits - hits_before
+            self.stats["cache_hits"] += hit_delta
+            self._tstats(bucket[0].tenant)["cache_hits"] += hit_delta
+            finalized += self._finalize_outs(outs, now=self._clock(),
+                                             per_item_s=per_item_s)
         if (self.config.checkpoint_every
                 and self._completed_since_ckpt
                 >= self.config.checkpoint_every):
@@ -496,6 +684,9 @@ class MatchService:
         self._service_times.clear()
         self._completed_since_ckpt = 0
         self._next_id = 0
+        self._retry_rng = random.Random(self.config.backoff_seed)
+        self._shed_streak.clear()
+        self._shed_rng.clear()
         self.stats = {k: 0 for k in self.stats}
         self.tenant_stats = {t: _tenant_stats() for t in self.tenant_stats}
 
@@ -512,26 +703,25 @@ class MatchService:
         queued = {}
         for p in PRIORITIES:
             for r in self._queues[p]:
-                queued[str(r.request_id)] = r.attempts
+                queued[str(r.request_id)] = {"attempts": r.attempts,
+                                             "engine": r.engine}
         state = {
             "results": {str(rid): {
                 "count": r.count, "ok": r.ok, "shed": r.shed,
                 "failed": r.failed, "latency_s": r.latency_s,
                 "deadline_missed": r.deadline_missed,
                 "attempts": r.attempts, "tenant": r.tenant,
-                "priority": r.priority}
+                "priority": r.priority, "engine": r.engine}
                 for rid, r in self.results.items()},
             "queued": queued,
-            "in_flight": {str(rid): r.attempts
+            "in_flight": {str(rid): {"attempts": r.attempts,
+                                     "engine": r.engine}
                           for rid, r in self.in_flight.items()},
             "dispatches": self.stats["dispatches"],
             "next_id": self._next_id,
             "graph_version": self.dataset.graph_version,
         }
-        tmp = self.config.state_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(state, f)
-        os.replace(tmp, self.config.state_path)
+        write_checkpoint(self.config.state_path, state)
         self.stats["checkpoints"] += 1
 
     def restore(self) -> dict | None:
@@ -545,12 +735,18 @@ class MatchService:
         result is either in the checkpoint or its request is re-run, never
         both). Call after `submit(force=True)`-replaying the workload.
         Rejects checkpoints taken at a different dataset graph_version
-        (stale counts). Returns the raw state, or None without one."""
-        path = self.config.state_path
-        if not path or not os.path.exists(path):
+        (stale counts). Returns the raw state, or None without one.
+
+        A truncated/corrupt state file falls back to the `.prev`
+        generation (bumping `stats["restore_fallbacks"]`); with no
+        readable generation the restore is a no-op and the replayed
+        workload simply re-runs — corruption costs durability, never
+        availability."""
+        state, fell_back = read_checkpoint(self.config.state_path)
+        if fell_back:
+            self.stats["restore_fallbacks"] += 1
+        if state is None:
             return None
-        with open(path) as f:
-            state = json.load(f)
         ckpt_version = int(state.get("graph_version", 0))
         if ckpt_version != self.dataset.graph_version:
             raise ValueError(
@@ -559,10 +755,16 @@ class MatchService:
                 f"counts are stale — re-run the workload instead of "
                 f"restoring")
         terminal = state.get("results", {})
-        attempts = {**{int(i): int(a)
-                       for i, a in state.get("queued", {}).items()},
-                    **{int(i): int(a)
-                       for i, a in state.get("in_flight", {}).items()}}
+        # non-terminal records carry {"attempts", "engine"} (legacy
+        # checkpoints stored a bare attempts int — still accepted)
+        pending = {**state.get("queued", {}), **state.get("in_flight", {})}
+        attempts, engines = {}, {}
+        for i, rec in pending.items():
+            if isinstance(rec, dict):
+                attempts[int(i)] = int(rec.get("attempts", 0))
+                engines[int(i)] = rec.get("engine")
+            else:
+                attempts[int(i)] = int(rec)
         for p in PRIORITIES:
             keep: deque[MatchRequest] = deque()
             for r in self._queues[p]:
@@ -575,9 +777,11 @@ class MatchService:
                         failed=rec["failed"],
                         latency_s=rec["latency_s"],
                         deadline_missed=rec["deadline_missed"],
-                        attempts=rec["attempts"])
+                        attempts=rec["attempts"],
+                        engine=rec.get("engine"))
                 else:
                     r.attempts = attempts.get(r.request_id, r.attempts)
+                    r.engine = engines.get(r.request_id, r.engine)
                     keep.append(r)
             self._queues[p] = keep
         self.stats["dispatches"] = int(state.get("dispatches", 0))
@@ -619,24 +823,31 @@ class ServiceSupervisor:
 
     def run(self, *, injector=None, fail_hook=None) -> SupervisedServe:
         """Run the workload to completion through crashes; raises only
-        after `max_restarts` consecutive failures."""
+        after `max_restarts` consecutive failures. The replay and restore
+        phases run *inside* the crash boundary: a supervisor killed
+        mid-restore (after the checkpoint read, before the first bucket)
+        restarts like any other crash — the checkpoint on disk is
+        immutable through restore, so the retried restore sees identical
+        state. A crashed generation's service is always `close()`d, so
+        worker-pool generations never leak processes."""
         restarts = 0
         recovery_s = 0.0
         t_crash: float | None = None
         while True:
             svc = self.factory()
-            for kw in self.workload:
-                svc.submit(**kw, force=True)
-            svc.restore()
-            if t_crash is not None:
-                recovery_s += time.monotonic() - t_crash
-                t_crash = None
             try:
+                for kw in self.workload:
+                    svc.submit(**kw, force=True)
+                svc.restore()
+                if t_crash is not None:
+                    recovery_s += time.monotonic() - t_crash
+                    t_crash = None
                 counts = svc.drain(fail_hook=fail_hook, injector=injector)
                 return SupervisedServe(service=svc, counts=counts,
                                        restarts=restarts,
                                        recovery_s=recovery_s)
             except Exception:   # noqa: BLE001 — any crash → restart
+                svc.close()
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise

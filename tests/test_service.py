@@ -1,15 +1,19 @@
 """Tier-1 chaos suite for the always-on match service
 (`repro.runtime.service`): exact non-duplicated counts under injected
 executor death, deadline-driven partial-bucket flush, backpressure
-shedding, poison-query isolation, priority starvation protection,
-kill→restore→resume round-trips, and the queue-runtime satellite fixes
-(straggler/re-issue stat split, persisted attempts + failed items)."""
+shedding (with per-tenant exponential retry backoff), poison-query
+isolation, priority starvation protection, kill→restore→resume
+round-trips — including restart-under-restart (a supervisor killed
+mid-restore) and corrupt-checkpoint `.prev` fallback — and the
+queue-runtime satellite fixes (straggler/re-issue stat split, persisted
+attempts + failed items)."""
 import pytest
 
 from repro.core import random_walk_query, synthetic_labeled_graph
 from repro.core.ref_engine import cemr_match
 from repro.runtime.ft import FaultInjector
-from repro.runtime.queue import MatchQueueRuntime
+from repro.runtime.queue import (MatchQueueRuntime, read_checkpoint,
+                                 write_checkpoint)
 from repro.runtime.service import (Admitted, MatchService, Overloaded,
                                    ServiceConfig, ServiceSupervisor,
                                    arrival_schedule)
@@ -243,6 +247,142 @@ def test_fault_injector_seeded_mode():
     assert len(fires(11)) > 0
     with pytest.raises(ValueError):
         FaultInjector(fail_rate=1.5)
+
+
+def test_supervisor_killed_mid_restore_resumes(tmp_path, data, queries,
+                                               expected):
+    """Restart-under-restart: generation 1 crashes mid-drain (checkpoint
+    on disk, bucket in flight); generation 2 is killed *during restore*,
+    after the checkpoint read and before any bucket; generation 3 must
+    resume from the same (immutable-through-restore) checkpoint with
+    exact counts and exactly-once execution."""
+    path = str(tmp_path / "svc.json")
+    cfg = ServiceConfig(bucket_size=2, state_path=path)
+    crash = {"armed": 1}
+
+    class CrashOnRestore(MatchService):
+        def restore(self):
+            state = super().restore()
+            if state is not None and crash["armed"]:
+                crash["armed"] -= 1
+                raise RuntimeError("killed mid-restore")
+            return state
+
+    executions = []
+    sup = ServiceSupervisor(lambda: CrashOnRestore(data, config=cfg),
+                            _workload(queries))
+    res = sup.run(injector=FaultInjector(fail_at={1}),
+                  fail_hook=lambda req: executions.append(req.request_id))
+    assert res.restarts == 2                    # drain crash + restore crash
+    assert crash["armed"] == 0
+    assert [res.counts[i] for i in range(len(queries))] == expected
+    # exactly-once across all three generations: dispatch 0 ran before the
+    # first crash; the in-flight bucket and the rest ran in generation 3
+    assert sorted(executions) == list(range(len(queries)))
+
+
+def test_fail_at_never_refires_across_generations(tmp_path, data, queries,
+                                                  expected):
+    """Deterministic `fail_at` indices fire exactly once each across three
+    generations of restarts: the restart count equals the index count and
+    the replayed dispatches are not re-killed."""
+    path = str(tmp_path / "svc.json")
+    cfg = ServiceConfig(bucket_size=2, state_path=path)
+    injector = FaultInjector(fail_at={0, 1, 2})
+    sup = ServiceSupervisor(lambda: MatchService(data, config=cfg),
+                            _workload(queries))
+    res = sup.run(injector=injector)
+    assert res.restarts == 3                    # one per scheduled index
+    assert injector.fired == {0, 1, 2}          # each fired exactly once
+    assert [res.counts[i] for i in range(len(queries))] == expected
+    assert res.service.stats["failed"] == 0
+
+
+# --------------------------------------------------- corrupt checkpoints
+def test_checkpoint_prev_generation_round_trip(tmp_path):
+    p = str(tmp_path / "state.json")
+    assert read_checkpoint(p) == (None, False)          # nothing yet
+    write_checkpoint(p, {"gen": 1})
+    assert read_checkpoint(p) == ({"gen": 1}, False)
+    write_checkpoint(p, {"gen": 2})
+    assert read_checkpoint(p) == ({"gen": 2}, False)
+    with open(p, "w") as f:
+        f.write('{"gen": 2')                            # truncated write
+    assert read_checkpoint(p) == ({"gen": 1}, True)     # .prev fallback
+    with open(p + ".prev", "w") as f:
+        f.write("not json either")
+    # both generations unreadable: no checkpoint, flagged as a fallback
+    assert read_checkpoint(p) == (None, True)
+
+
+def test_service_restore_survives_corrupt_checkpoint(tmp_path, data,
+                                                     queries, expected):
+    path = str(tmp_path / "svc.json")
+    cfg = ServiceConfig(bucket_size=2, state_path=path)
+    svc = MatchService(data, config=cfg)
+    for kw in _workload(queries):
+        svc.submit(**kw)
+    svc.drain()
+    with open(path, "w") as f:
+        f.write('{"results": {"0"')                     # torn/corrupt live
+    svc2 = MatchService(data, config=cfg)
+    for kw in _workload(queries):
+        svc2.submit(**kw, force=True)
+    svc2.restore()                                      # falls back, no raise
+    assert svc2.stats["restore_fallbacks"] == 1
+    counts = svc2.drain()
+    assert [counts[i] for i in range(len(queries))] == expected
+
+
+def test_queue_restore_survives_corrupt_checkpoint(tmp_path, data, queries,
+                                                   expected):
+    path = str(tmp_path / "queue.json")
+    rt = MatchQueueRuntime(data, state_path=path)
+    rt.submit(queries[:5], limit=10**9)
+    rt.run(checkpoint_every=1)
+    with open(path, "w") as f:
+        f.write("\x00\x01 not a checkpoint")
+    rt2 = MatchQueueRuntime(data, state_path=path)
+    rt2.submit(queries[:5], limit=10**9)
+    assert rt2.restore() is not None                    # .prev generation
+    assert rt2.stats["restore_fallbacks"] == 1
+    results = rt2.run()
+    assert [results[i] for i in range(5)] == expected[:5]
+
+
+# ------------------------------------------------------- shed backoff
+def test_shed_backoff_geometric_jittered_and_reset(data, queries):
+    def sheds(svc, n):
+        return [svc.submit(queries[1], limit=10**9, max_steps=None)
+                for _ in range(n)]
+
+    cfg = ServiceConfig(inbox_capacity=1, backoff_seed=7)
+    svc = MatchService(data, config=cfg)
+    svc.submit(queries[0], limit=10**9, max_steps=None)  # fills the inbox
+    hints = [t.retry_after_s for t in sheds(svc, 4)]
+    assert all(isinstance(t, float) and t > 0 for t in hints)
+    # geometric growth dominates the [0.5, 1.5] jitter two steps apart
+    assert hints[2] > hints[0] and hints[3] > hints[1]
+    assert all(h <= cfg.retry_after_max_s for h in hints)
+    # deterministic: an identical service replays the identical hints
+    svc_b = MatchService(data, config=cfg)
+    svc_b.submit(queries[0], limit=10**9, max_steps=None)
+    assert [t.retry_after_s for t in sheds(svc_b, 4)] == hints
+    # a *different* tenant's backoff is independent (own streak, own rng)
+    other = svc.submit(queries[1], tenant="other", limit=10**9,
+                       max_steps=None)
+    assert isinstance(other, Overloaded)
+    assert other.retry_after_s < hints[3]
+    # an accepted submit resets the streak: the next shed backs off from
+    # the base again (streak 1) instead of continuing the geometric climb
+    assert svc._shed_streak["default"] == 4
+    svc.drain()
+    accepted = svc.submit(queries[0], limit=10**9, max_steps=None)
+    assert isinstance(accepted, Admitted)
+    assert svc._shed_streak["default"] == 0
+    fresh = svc.submit(queries[1], limit=10**9, max_steps=None)
+    assert isinstance(fresh, Overloaded)
+    assert svc._shed_streak["default"] == 1
 
 
 # ------------------------------------------------------------ tenant isolation
