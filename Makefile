@@ -1,7 +1,7 @@
 .PHONY: verify test test-tier2 bench bench-baseline perf-smoke compile-bench \
 	compile-smoke batch-bench batch-smoke shard-test shard-bench \
 	shard-smoke delta-bench delta-smoke serve-bench serve-smoke \
-	chaos-smoke docs-check
+	fail-bench fail-smoke chaos-smoke coverage docs-check
 
 verify:
 	bash scripts/ci.sh
@@ -24,6 +24,7 @@ bench-baseline:
 	PYTHONPATH=src XLA_FLAGS="--xla_force_host_platform_device_count=4" python -m benchmarks.shard_bench --json benchmarks/BENCH_shard.json
 	PYTHONPATH=src python -m benchmarks.delta_bench --json benchmarks/BENCH_delta.json
 	PYTHONPATH=src python -m benchmarks.serve_bench --json benchmarks/BENCH_serve.json
+	PYTHONPATH=src python -m benchmarks.fail_bench --json benchmarks/BENCH_fail.json
 
 perf-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only fig7 --json /tmp/BENCH_new.json
@@ -65,10 +66,25 @@ serve-bench:
 serve-smoke: serve-bench
 	PYTHONPATH=src python scripts/perf_smoke.py --serve /tmp/BENCH_serve_new.json benchmarks/BENCH_serve.json
 
+# failure-reuse negative cache: warm on/off enumeration ratio + health gate
+fail-bench:
+	PYTHONPATH=src python -m benchmarks.fail_bench --json /tmp/BENCH_fail_new.json
+
+fail-smoke: fail-bench
+	PYTHONPATH=src python scripts/perf_smoke.py --fail /tmp/BENCH_fail_new.json benchmarks/BENCH_fail.json
+
 # live process chaos: SIGKILL + hang injection against a real 2-worker pool
 # (zero lost, zero double-counted, pool back to size)
 chaos-smoke:
 	PYTHONPATH=src python scripts/perf_smoke.py --chaos
+
+# line coverage over the core engine package (needs pytest-cov; see
+# requirements-dev.txt) — reporting aid, not a gate
+coverage:
+	PYTHONPATH=src python -m pytest -q -m "not tier2" \
+		--cov=src/repro/core --cov-report=term-missing \
+		tests/test_failure_cache.py tests/test_batch_differential.py \
+		tests/test_vector_engine.py tests/test_scheduler.py
 
 # documentation gates: link/anchor check, README quickstart smoke, docstrings
 docs-check:

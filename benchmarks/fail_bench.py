@@ -1,0 +1,115 @@
+"""Failure-reuse negative cache benchmark: warm enumeration with the
+failed-extension ring buffer on vs off.
+
+Evidence for the negative-cache acceptance criterion: on the shared fig7
+datasets with the *deep* query mix (sizes 6 and 8, where re-derived dead
+ends are worth money), every query is enumerated through one Matcher per
+cache mode in repeated passes over the whole query set:
+
+  * pass 0 — compile + jit + (cache on) populate the ring buffers with the
+    run's failed extension read-sets;
+  * passes 1..N — the measured warm passes: the standing-query posture,
+    where cache-on runs mask known-dead frontier rows before expansion
+    instead of re-deriving them. The reported time is the sum of
+    *per-query* minima over the N passes (the `common.run_method`
+    convention — load spikes only ever inflate a timing, and a per-query
+    min discards a spike without discarding the whole pass).
+
+Both modes must agree on every count (asserted — the cache is gated by the
+differential suite in tests/test_failure_cache.py, and this bench re-checks
+it at bench scale). The off rows time the identical warm loop with
+`use_failure_cache=False`.
+
+Rows: fail.<dataset>.<mode>,us_per_query,count=..;queries=.. — the on rows
+add fail_hits=..;fail_pruned=..;populated=.. (hits/pruned summed over the
+best warm pass; `populated` is pass 0's insert count, so the smoke gate can
+tell a dead cache from a workload with nothing to reuse).
+
+  PYTHONPATH=src python -m benchmarks.fail_bench                 # print CSV
+  PYTHONPATH=src python -m benchmarks.fail_bench --json [PATH]   # + JSON
+                                                  (default BENCH_fail.json)
+
+`scripts/perf_smoke.py --fail` gates the same-host on/off ratio against the
+committed benchmarks/BENCH_fail.json baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.api import Dataset, Matcher, MatchOptions
+
+from .common import bench_row, fig7_workloads
+
+SIZES = (6, 8)         # deep queries: duplicate failures dominate there
+PER_SIZE = 3
+N_PASSES = 5           # per-query min over this many warm passes
+
+
+def fail_on_off(scale=0.03, limit=1_000_000):
+    rows = []
+    for name, (data, sized) in fig7_workloads(
+            scale, sizes=SIZES, per_size=PER_SIZE).items():
+        queries = [q for _, q in sized]
+        if not queries:
+            continue
+        res = {}
+        for mode, fc in (("off", False), ("on", True)):
+            m = Matcher(Dataset.from_graph(data))
+            opts = MatchOptions(engine="vector", tile_rows=512, limit=limit,
+                                use_failure_cache=fc)
+            warmup = [m.count(q, opts) for q in queries]       # pass 0
+            populated = sum(o.stats.fail_inserts for o in warmup)
+            best = [float("inf")] * len(queries)
+            outs = list(warmup)
+            for _ in range(N_PASSES):
+                for qi, q in enumerate(queries):
+                    t0 = time.perf_counter()
+                    o = m.count(q, opts)
+                    dt = time.perf_counter() - t0
+                    if dt < best[qi]:
+                        best[qi] = dt
+                        outs[qi] = o
+            counts = [o.count for o in outs]
+            assert counts == [o.count for o in warmup], \
+                f"{name}: warm pass diverged from its own cold pass ({mode})"
+            res[mode] = (sum(best), counts, outs, populated)
+        assert res["on"][1] == res["off"][1], \
+            f"{name}: counts diverged with the failure cache on"
+        nq = len(queries)
+        total = sum(res["on"][1])
+        hits = sum(o.stats.fail_hits for o in res["on"][2])
+        pruned = sum(o.stats.fail_pruned_rows for o in res["on"][2])
+        rows.append(bench_row(
+            f"fail.{name}.off", res["off"][0] / nq,
+            f"count={total};queries={nq}"))
+        rows.append(bench_row(
+            f"fail.{name}.on", res["on"][0] / nq,
+            f"count={total};queries={nq};fail_hits={hits}"
+            f";fail_pruned={pruned};populated={res['on'][3]}"))
+    return rows
+
+
+def main() -> None:
+    from .run import parse_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_fail.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to PATH (default BENCH_fail.json)")
+    args = ap.parse_args()
+    rows = fail_on_off(scale=0.08 if args.full else 0.03)
+    print("name,us_per_query,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.json:
+        from .common import bench_env
+        with open(args.json, "w") as f:
+            json.dump({"env": bench_env(), "rows": parse_rows(rows)}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

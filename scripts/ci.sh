@@ -49,6 +49,13 @@ python -m benchmarks.delta_bench --json "$delta_json"
 echo "== delta smoke (delta/full maintenance-cost gate) =="
 python scripts/perf_smoke.py --delta "$delta_json" benchmarks/BENCH_delta.json
 
+echo "== fail bench (failure-reuse negative cache, warm on/off) =="
+fail_json="$(mktemp /tmp/BENCH_fail_new.XXXXXX.json)"
+python -m benchmarks.fail_bench --json "$fail_json"
+
+echo "== fail smoke (negative-cache health + on/off ratio gate) =="
+python scripts/perf_smoke.py --fail "$fail_json" benchmarks/BENCH_fail.json
+
 echo "== serve bench (open-loop latency/shed + crash recovery) =="
 serve_json="$(mktemp /tmp/BENCH_serve_new.XXXXXX.json)"
 python -m benchmarks.serve_bench --json "$serve_json"
@@ -63,7 +70,9 @@ echo "== shard differential (4 forced host devices) =="
 # sharded == sequential == ref across the strategy workloads; runs in its
 # own process because the device count must be fixed before jax loads
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-    python -m pytest -q tests/test_shard_differential.py
+    python -m pytest -q tests/test_shard_differential.py \
+    tests/test_failure_cache.py::test_sharded_parity \
+    tests/test_failure_cache.py::test_sharded_superbatch_parity
 
 echo "== shard bench (sharded vs single-device enumeration) =="
 shard_json="$(mktemp /tmp/BENCH_shard_new.XXXXXX.json)"
@@ -72,6 +81,20 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 
 echo "== shard smoke (sharded/seq speedup gate) =="
 python scripts/perf_smoke.py --shard "$shard_json" benchmarks/BENCH_shard.json
+
+echo "== coverage report (core engine; non-blocking) =="
+# Informational only: line coverage over src/repro/core from the engine
+# differential suites. Skipped when pytest-cov isn't installed (it is a
+# requirements-dev extra, not a runtime dependency), and never fails CI.
+if python -c "import pytest_cov" 2>/dev/null; then
+    python -m pytest -q -m "not tier2" \
+        --cov=src/repro/core --cov-report=term \
+        tests/test_failure_cache.py tests/test_batch_differential.py \
+        tests/test_vector_engine.py tests/test_scheduler.py \
+        || echo "coverage report failed (non-blocking)"
+else
+    echo "pytest-cov not installed; skipping coverage report"
+fi
 
 echo "== docs: relative links + anchors =="
 python scripts/check_docs.py README.md docs

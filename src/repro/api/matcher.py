@@ -121,14 +121,17 @@ class CompiledQuery:
         step functions, so option changes never silently share state."""
         from repro.core.engine import VectorEngine
         key = (opts.tile_rows, opts.use_cv, opts.use_dedup,
-               opts.use_cer_buffer, opts.cer_buffer_slots, opts.pack_tiles,
-               opts.intersect, id(intersect_fn), mesh)
+               opts.use_cer_buffer, opts.cer_buffer_slots,
+               opts.use_failure_cache, opts.failure_cache_slots,
+               opts.pack_tiles, opts.intersect, id(intersect_fn), mesh)
         eng = self._engines.get(key)
         if eng is None:
             eng = VectorEngine(self.cs, self.an, tile_rows=opts.tile_rows,
                                use_cv=opts.use_cv, use_dedup=opts.use_dedup,
                                use_cer_buffer=opts.use_cer_buffer,
                                cer_buffer_slots=opts.cer_buffer_slots,
+                               use_failure_cache=opts.use_failure_cache,
+                               failure_cache_slots=opts.failure_cache_slots,
                                pack_tiles=opts.pack_tiles,
                                intersect=opts.intersect,
                                intersect_fn=intersect_fn, plan=self.plan,
@@ -542,6 +545,7 @@ class Matcher:
         mesh = self._resolve_mesh(opts)
         key = (sig, tuple(id(cq.plan) for cq in cqs), opts.use_cv,
                opts.use_dedup, opts.use_cer_buffer, opts.cer_buffer_slots,
+               opts.use_failure_cache, opts.failure_cache_slots,
                opts.pack_tiles, mesh)
         sched = self._batch_cache.get(key)
         if sched is None:
@@ -549,6 +553,8 @@ class Matcher:
                       use_dedup=opts.use_dedup,
                       use_cer_buffer=opts.use_cer_buffer,
                       cer_buffer_slots=opts.cer_buffer_slots,
+                      use_failure_cache=opts.use_failure_cache,
+                      failure_cache_slots=opts.failure_cache_slots,
                       pack_tiles=opts.pack_tiles)
             plans = [cq.plan for cq in cqs]
             if mesh is not None:

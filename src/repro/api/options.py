@@ -49,6 +49,12 @@ class MatchOptions:
                       disables the ring buffer — batched supersteps stay
                       fused).
     cer_buffer_slots: ring-buffer capacity per CER-enabled stage.
+    use_failure_cache: failure-reuse negative cache (vector fused path and
+                      superbatch): ring buffer of failed extension read-sets
+                      whose hits mask dead frontier rows before dispatch.
+                      The compat stage-at-a-time loop never consults it and
+                      reports its stats as zeros.
+    failure_cache_slots: ring-buffer capacity per fail-cache-enabled stage.
     pack_tiles      : merge sub-capacity sibling frontiers before dispatch
                       (frontier compaction; vector engine only).
     intersect       : intersect kernel — "auto" (Pallas compiled on TPU, jnp
@@ -81,6 +87,8 @@ class MatchOptions:
     use_dedup: bool = True
     use_cer_buffer: bool = True
     cer_buffer_slots: int = 256
+    use_failure_cache: bool = True
+    failure_cache_slots: int = 64
     pack_tiles: bool = True
     intersect: str = "auto"
     mesh: str | int | None = None
@@ -113,6 +121,10 @@ class MatchOptions:
                 or self.cer_buffer_slots < 1):
             raise ValueError(f"cer_buffer_slots must be a positive int, "
                              f"got {self.cer_buffer_slots!r}")
+        if (not isinstance(self.failure_cache_slots, int)
+                or self.failure_cache_slots < 1):
+            raise ValueError(f"failure_cache_slots must be a positive int, "
+                             f"got {self.failure_cache_slots!r}")
         if self.mesh is not None and self.mesh != "auto" and (
                 not isinstance(self.mesh, int) or isinstance(self.mesh, bool)
                 or self.mesh < 1):

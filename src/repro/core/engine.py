@@ -68,6 +68,13 @@ class VectorStats:
     dedup_unique: int = 0
     cer_hits: int = 0                # rows served from the cross-tile CER buffer
     cer_misses: int = 0
+    fail_hits: int = 0               # frontier rows masked dead by the failure
+                                     # cache (one per matching stage lookup)
+    fail_misses: int = 0             # failure-cache lookups finding no entry
+    fail_inserts: int = 0            # failed read-sets recorded in the ring
+    fail_pruned_rows: int = 0        # rows killed before their subtree was
+                                     # dispatched (<= fail_hits: a row hit by
+                                     # several stage lookups prunes once)
     bucketed_tiles: int = 0          # per-tile CER bucketed computes (compat path)
     packed_tiles: int = 0            # sibling-tile merges (frontier compaction)
     batched_queries: int = 0         # queries advanced by this superbatch run
@@ -140,6 +147,8 @@ class VectorEngine:
                  use_dedup: bool = True, intersect_fn=None,
                  plan: MatchingPlan | None = None, intersect: str = "auto",
                  use_cer_buffer: bool = True, cer_buffer_slots: int = 256,
+                 use_failure_cache: bool = True,
+                 failure_cache_slots: int = 64,
                  pack_tiles: bool = True, mesh=None):
         # `plan` lets a session layer (repro.api.Matcher) build the plan once
         # and share it across engine configurations. `mesh` is a jax Mesh
@@ -154,6 +163,8 @@ class VectorEngine:
         self.use_dedup = use_dedup
         self.use_cer_buffer = use_cer_buffer
         self.cer_buffer_slots = cer_buffer_slots
+        self.use_failure_cache = use_failure_cache
+        self.failure_cache_slots = failure_cache_slots
         self.pack_tiles = pack_tiles
         self.mesh = mesh
         if intersect_fn is None:
@@ -485,7 +496,8 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
                  use_cv: bool = True, use_dedup: bool = True,
                  intersect_fn=None, order: list[int] | None = None,
                  intersect: str = "auto", use_cer_buffer: bool = True,
-                 cer_buffer_slots: int = 256, pack_tiles: bool = True,
+                 cer_buffer_slots: int = 256, use_failure_cache: bool = True,
+                 failure_cache_slots: int = 64, pack_tiles: bool = True,
                  mesh=None) -> VectorMatchResult:
     """End-to-end vectorized CEMR matching (preprocess + tile enumeration)."""
     cs, an = preprocess(query, data, encoding=encoding, order=order)
@@ -496,5 +508,7 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
                        use_dedup=use_dedup, intersect_fn=intersect_fn,
                        intersect=intersect, use_cer_buffer=use_cer_buffer,
                        cer_buffer_slots=cer_buffer_slots,
+                       use_failure_cache=use_failure_cache,
+                       failure_cache_slots=failure_cache_slots,
                        pack_tiles=pack_tiles, mesh=mesh)
     return eng.run(limit=limit, max_steps=max_steps, materialize=materialize)

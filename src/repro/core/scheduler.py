@@ -31,6 +31,14 @@ and the host loop thin:
     embeddings in *sibling* tiles popped later from the work stack. Hit/miss
     counters surface in VectorStats.
 
+  * **Failure-reuse negative cache** — the dual ring buffer: read-sets whose
+    extension *failed* (empty or under the contained-vertex threshold) are
+    recorded with a conflict witness, and matching frontier rows are masked
+    dead right after expansion — before any of their subtree is dispatched.
+    Same hash-first/exact-verify lookup (collisions only cost recomputes);
+    `fail_*` counters surface in VectorStats. See docs/engine.md
+    §Failure-reuse negative cache.
+
   * **On-device leaf counting** — leaf supersteps are traced under scoped
     x64: the inclusion-exclusion product reduces in int64 on device, with a
     float64 magnitude bound tripping an overflow flag; only flagged tiles
@@ -275,6 +283,116 @@ def _cer_compute(keys, compute, tile, buf):
 
 
 # ---------------------------------------------------------------------------
+# failure-reuse negative cache (the dual of the CER ring buffer)
+# ---------------------------------------------------------------------------
+# CER caches *successful* extensions; this buffer caches *failed* ones (Arai
+# et al., "Fast Subgraph Matching by Exploiting Search Failures"): read-sets
+# whose extension came back empty or under the contained-vertex threshold.
+# Because the extension bitmap — and therefore the failure verdict — is a
+# pure function of the read-set key, a recorded failure lets every brother
+# row in any later tile be masked dead right after expansion, before its
+# subtree is ever dispatched. Entries carry a conflict witness
+# (stage << 1 | cause) for observability. Lookup is the same
+# hash-first/exact-verify scheme as _cer_compute, so a hash collision can
+# only cost a recompute, never a wrong prune.
+
+
+def _init_fail_buffer(n_slots: int, key_width: int):
+    """Empty failure ring buffer: keys (S, K) int32, hash (S,), witness
+    (S,) int32 (stage << 1 | cause; cause 1 = contained-vertex threshold,
+    0 = empty intersection), valid (S,) bool, ptr () int32 ring cursor."""
+    return {
+        "keys": jnp.full((n_slots, key_width), -1, jnp.int32),
+        "hash": jnp.full((n_slots,), -1, jnp.int32),
+        "wit": jnp.zeros((n_slots,), jnp.int32),
+        "valid": jnp.zeros((n_slots,), bool),
+        "ptr": jnp.zeros((), jnp.int32),
+    }
+
+
+def _fail_hash(keys):
+    """Row-wise fold of the key columns (same polynomial as _cer_compute)."""
+    h = jnp.zeros(keys.shape[0], jnp.int32)
+    for j in range(keys.shape[1]):
+        h = h * jnp.int32(1000003) + keys[:, j]          # wraps: fine
+    return h
+
+
+def _fail_lookup(keys, alive, buf):
+    """Known-failure mask for a tile: hash-first candidate slot, then exact
+    key verification — a collision or a poisoned entry can only produce a
+    miss (the row computes as usual), never a wrong hit. Restricted to
+    `alive` rows so dead lanes neither hit nor count as misses. The whole
+    probe is cond-gated on the buffer holding any entry at all, so stages
+    whose extensions never fail pay one reduction per superstep, not the
+    compare/argmax/gather chain."""
+    def probe(_):
+        h = _fail_hash(keys)
+        cand = (buf["hash"][None, :] == h[:, None]) & buf["valid"][None, :]
+        maybe = cand.any(axis=1)
+        hidx = jnp.argmax(cand, axis=1)
+        return alive & maybe & (buf["keys"][hidx] == keys).all(axis=-1)
+
+    return jax.lax.cond(buf["valid"].any(), probe,
+                        lambda _: jnp.zeros_like(alive), None)
+
+
+def _fail_insert(keys, fail, wit, buf):
+    """Ring-insert one representative per distinct failing key (deduped by
+    hash, capped at capacity — mirrors _cer_compute.do_insert); the whole
+    sort/dedup/scatter is cond-gated so failure-free supersteps pay
+    nothing. Returns (new_buf, n_inserted)."""
+    n_slots = buf["keys"].shape[0]
+    h = _fail_hash(keys)
+
+    def do_insert(buf):
+        order = jnp.lexsort((h, ~fail))                  # failing rows first
+        h_s = h[order]
+        fail_s = fail[order]
+        diff = jnp.concatenate([jnp.ones(1, bool), h_s[1:] != h_s[:-1]])
+        first = fail_s & diff
+        rank = jnp.cumsum(first.astype(jnp.int32)) - 1
+        first_ok = first & (rank < n_slots)
+        n_ins = first_ok.sum().astype(jnp.int32)
+        slot = jnp.where(first_ok, (buf["ptr"] + rank) % n_slots,
+                         n_slots).astype(jnp.int32)      # n_slots = dummy row
+        pad_k = jnp.concatenate([buf["keys"],
+                                 jnp.zeros((1, keys.shape[1]), jnp.int32)])
+        pad_h = jnp.concatenate([buf["hash"], jnp.zeros((1,), jnp.int32)])
+        pad_w = jnp.concatenate([buf["wit"], jnp.zeros((1,), jnp.int32)])
+        pad_ok = jnp.concatenate([buf["valid"], jnp.zeros((1,), bool)])
+        pad_k = pad_k.at[slot].set(keys[order])
+        pad_h = pad_h.at[slot].set(h_s)
+        pad_w = pad_w.at[slot].set(wit[order])
+        pad_ok = pad_ok.at[slot].set(jnp.ones(slot.shape[0], bool))
+        return {"keys": pad_k[:n_slots], "hash": pad_h[:n_slots],
+                "wit": pad_w[:n_slots], "valid": pad_ok[:n_slots],
+                "ptr": ((buf["ptr"] + n_ins) % n_slots).astype(jnp.int32)
+                }, n_ins
+
+    return jax.lax.cond(fail.any(), do_insert,
+                        lambda b: (b, jnp.int32(0)), buf)
+
+
+def _fail_plan(segs, n_bounds_before, fail_seg, slots_of):
+    """Static lookup schedule for one ladder: map segment index k to the
+    [(stage, dedup slots)] whose failure buffers become checkable right
+    after segment k's expansion. A stage is checkable once every key slot
+    is an existing idx column (idx width after segment k's expand is
+    `n_bounds_before + k + 1` — each boundary appends one column), and is
+    looked up exactly once, at the earliest qualifying segment, so a known
+    failure kills the subtree as many expansions early as the key allows."""
+    fail_by_seg: list = [[] for _ in segs]
+    for sj, ks in fail_seg.items():
+        slots = list(slots_of(sj))
+        k0 = min(ks, max(0, max(slots) - n_bounds_before))
+        fail_by_seg[k0].append((sj, slots))
+    for entries in fail_by_seg:
+        entries.sort()
+    return fail_by_seg
+
+
+# ---------------------------------------------------------------------------
 # scheduler
 # ---------------------------------------------------------------------------
 
@@ -296,6 +414,15 @@ class TileScheduler:
             op = eng._stages[si][1]
             self._buffers[si] = _init_cer_buffer(
                 eng.cer_buffer_slots, len(op.dedup_slots), op.n_words)
+        self._fail_stages = [si for si in range(self._n_stages)
+                             if self._fail_eligible(si)]
+        self._fail_buffers = {
+            si: _init_fail_buffer(eng.failure_cache_slots,
+                                  len(eng._stages[si][1].dedup_slots))
+            for si in self._fail_stages}
+        # test hook: called with the scheduler after every superstep's
+        # buffer fold-back (tests corrupt _fail_buffers mid-run through it)
+        self.fail_debug_hook = None
         self.stats = VectorStats()
 
     # ----------------------------------------------------------- static shape
@@ -306,6 +433,19 @@ class TileScheduler:
     def _cer_eligible(self, si: int) -> bool:
         eng = self.eng
         if not (eng.use_dedup and eng.use_cer_buffer):
+            return False
+        stage = eng._stages[si]
+        return (stage[0] == "extend" and bool(stage[1].dedup_slots)
+                and bool(stage[1].bk_pairs))
+
+    def _fail_eligible(self, si: int) -> bool:
+        # same read-set requirements as CER (the failure verdict must be a
+        # pure function of the dedup-slot key), but independent of
+        # use_dedup so the negative cache composes with CER off; the fused
+        # path (use_cer_buffer) is required because the compat loop has no
+        # failure-cache wiring.
+        eng = self.eng
+        if not (eng.use_failure_cache and eng.use_cer_buffer):
             return False
         stage = eng._stages[si]
         return (stage[0] == "extend" and bool(stage[1].dedup_slots)
@@ -344,31 +484,40 @@ class TileScheduler:
         intermediate frontier so the host can resume exactly where the
         ladder stopped.
 
-        Returns (step, exit_bounds, seg_cer, n_computes, gather_ops). The
-        step takes an optional trailing `part` bitmap (root_words,) that is
-        ANDed into the root extension — the sharded scheduler's per-shard
-        partition of the level-0 candidate rows; `part=None` (the
-        single-device path) leaves the root mask untouched."""
+        Returns (step, exit_bounds, seg_cer, seg_fail, n_computes,
+        gather_ops). The step takes an optional trailing `part` bitmap
+        (root_words,) that is ANDed into the root extension — the sharded
+        scheduler's per-shard partition of the level-0 candidate rows;
+        `part=None` (the single-device path) leaves the root mask
+        untouched."""
         eng = self.eng
         t = self.t
         cer_set = set(self._cer_stages)
+        fail_set = set(self._fail_stages)
         segs = self._ladder(b)
         exit_bounds = [exit_si for (_, _, exit_si) in segs[:-1]]
         built = []                                       # per-segment closures
         seg_cer: list = []
+        fail_seg: dict = {}               # fail stage -> computing segment
         gather_ops = 0
         n_computes = 0
-        for (si, bms, exit_si) in segs:
+        for ki, (si, bms, exit_si) in enumerate(segs):
             leaf_i = exit_si == self._n_stages
             chain = []
             for sj in bms + ([] if leaf_i else [exit_si]):
                 compute_r, con = eng._make_compute_parts(sj)
                 chain.append((sj, eng._stages[sj][1], compute_r, con))
                 seg_cer += [sj] if sj in cer_set else []
+                if sj in fail_set:
+                    fail_seg[sj] = ki
                 if eng._stages[sj][0] == "extend":
                     gather_ops += t * max(len(eng._stages[sj][1].bk_pairs), 1)
                 n_computes += 1
             built.append((eng._make_expand(si), chain, leaf_i))
+        n_bounds_before = sum(1 for j in range(b) if self._is_boundary(j))
+        fail_by_seg = _fail_plan(segs, n_bounds_before, fail_seg,
+                                 lambda sj: eng._stages[sj][1].dedup_slots)
+        seg_fail = sorted(fail_seg)
         leaf_terms = eng._make_leaf_terms()
         leaf_reduce = make_leaf_reduce(eng.plan.leaf_singles,
                                        eng.plan.leaf_groups)
@@ -376,8 +525,8 @@ class TileScheduler:
         if root:
             root_compute_r, root_con = eng._make_compute_parts(0)
 
-        def run_compute(si, op, compute_r, con, tile, bufs, acc, tables,
-                        masks):
+        def run_compute(si, op, compute_r, con, tile, bufs, fbufs, acc, facc,
+                        tables, masks):
             if si in bufs:
                 keys = jnp.stack([tile["idx"][:, s] for s in op.dedup_slots],
                                  axis=1)
@@ -387,12 +536,45 @@ class TileScheduler:
                 acc = [a + v for a, v in zip(acc, s)]
             else:
                 r, pop = compute_r(tile, tables, masks)
+            raw_pop = pop                # true popcount for every alive row
             r, pop, ok = eng.finish_compute(tile, r, pop, con)
+            if si in fbufs:
+                # failure = an alive row whose extension died here. Alive
+                # rows always carry the true (CER-cached or computed) pop,
+                # and the verdict is a pure function of the key columns,
+                # so the entry is sound for every future brother row.
+                fkeys = jnp.stack(
+                    [tile["idx"][:, s] for s in op.dedup_slots], axis=1)
+                failed = tile["alive"] & ~ok
+                wit = jnp.int32(2 * si) + (raw_pop > 0).astype(jnp.int32)
+                fbufs[si], n_ins = _fail_insert(fkeys, failed, wit,
+                                                fbufs[si])
+                facc[2] = facc[2] + n_ins
             return r, pop, ok, acc
 
-        def step(tile, r_in, cursor, bufs, tables, masks, part=None):
+        def apply_fail_masks(k, cur, fbufs, facc):
+            # lookup-and-mask right after segment k's expansion (rank
+            # stable: R bit ranks, and therefore host chunk cursors, are
+            # untouched). A masked row's exit bitmap is zeroed downstream,
+            # so its subtree is never dispatched.
+            if not fail_by_seg[k]:
+                return
+            alive0 = cur["alive"]
+            dead = jnp.zeros_like(alive0)
+            for (sj, slots) in fail_by_seg[k]:
+                fkeys = jnp.stack([cur["idx"][:, s] for s in slots], axis=1)
+                fhit = _fail_lookup(fkeys, alive0, fbufs[sj])
+                facc[0] = facc[0] + fhit.sum().astype(jnp.int32)
+                facc[1] = facc[1] + (alive0 & ~fhit).sum().astype(jnp.int32)
+                dead = dead | fhit
+            cur["alive"] = alive0 & ~dead
+            facc[3] = facc[3] + dead.sum().astype(jnp.int32)
+
+        def step(tile, r_in, cursor, bufs, fbufs, tables, masks, part=None):
             bufs = dict(bufs)
+            fbufs = dict(fbufs)
             acc = [jnp.int32(0)] * 4                     # hits/misses/seen/ins
+            facc = [jnp.int32(0)] * 4                    # fail h/m/ins/pruned
             if root:
                 r0, pop0 = root_compute_r(tile, tables, masks)
                 r_in, _, _ = eng.finish_compute(tile, r0, pop0, root_con)
@@ -413,11 +595,12 @@ class TileScheduler:
                     total_in = tot.astype(jnp.int32)
                 else:
                     cur["alive"] = cur["alive"] & proceed
+                apply_fail_masks(k, cur, fbufs, facc)
                 last = None
                 for (sj, op, compute_r, con) in chain:
                     r, pop, ok, acc = run_compute(sj, op, compute_r, con,
-                                                  cur, bufs, acc, tables,
-                                                  masks)
+                                                  cur, bufs, fbufs, acc,
+                                                  facc, tables, masks)
                     last = (r, pop, ok)
                     if not leaf_i and sj == chain[-1][0]:
                         break                            # exit compute: no store
@@ -429,8 +612,10 @@ class TileScheduler:
                     count, overflow = leaf_reduce(terms, cur["alive"])
                     leaf_alive = cur["alive"].sum().astype(jnp.int32)
                     packed = jnp.stack(
-                        [total_in, leaf_alive, *alive_l, *total_l, *acc])
-                    return cur, terms, count, overflow, packed, frontiers, bufs
+                        [total_in, leaf_alive, *alive_l, *total_l, *acc,
+                         *facc])
+                    return (cur, terms, count, overflow, packed, frontiers,
+                            bufs, fbufs)
                 r2, pop2, ok2 = last
                 alive_k = ok2.sum().astype(jnp.int32)
                 total_k = jnp.sum(pop2, dtype=jnp.int32)
@@ -441,8 +626,8 @@ class TileScheduler:
                 proceed = ok_here if proceed is None else (proceed & ok_here)
                 cur_tile, cur_r, cur_cursor = cur, r2, jnp.int32(0)
 
-        return (step, exit_bounds, sorted(set(seg_cer)), n_computes,
-                gather_ops)
+        return (step, exit_bounds, sorted(set(seg_cer)), seg_fail,
+                n_computes, gather_ops)
 
     def _superstep(self, b: int):
         """Cached jitted wrapper of `_build_step(b)` — one device dispatch
@@ -450,9 +635,10 @@ class TileScheduler:
         key = ("ss", b)
         if key in self._jit:
             return self._jit[key]
-        step, exit_bounds, seg_cer, n_computes, gather_ops = \
+        step, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
             self._build_step(b)
-        entry = (jax.jit(step), exit_bounds, seg_cer, n_computes, gather_ops)
+        entry = (jax.jit(step), exit_bounds, seg_cer, seg_fail, n_computes,
+                 gather_ops)
         self._jit[key] = entry
         return entry
 
@@ -544,15 +730,21 @@ class TileScheduler:
                 break
             st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
             b, tile, r, cursor = stack.pop()
-            fn, exit_bounds, seg_cer, n_computes, gather_ops = \
+            fn, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
                 self._superstep(b)
             bufs = {si: self._buffers[si] for si in seg_cer}
+            fbufs = {si: self._fail_buffers[si] for si in seg_fail}
             with enable_x64():                           # leaf reduce is int64
-                leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2 = fn(
-                    tile, r, jnp.int32(cursor), bufs, eng.tables, eng.masks)
+                (leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2,
+                 fbufs2) = fn(tile, r, jnp.int32(cursor), bufs, fbufs,
+                              eng.tables, eng.masks)
             packed_np, cnt_np, ovf_np = jax.device_get((packed, cnt, ovf))
             for si in seg_cer:
                 self._buffers[si] = bufs2[si]
+            for si in seg_fail:
+                self._fail_buffers[si] = fbufs2[si]
+            if self.fail_debug_hook is not None:
+                self.fail_debug_hook(self)
             st.device_steps += 1
             st.supersteps += 1
             st.tiles += 1
@@ -564,11 +756,15 @@ class TileScheduler:
             leaf_alive = int(packed_np[1])
             alive_l = [int(v) for v in packed_np[2:2 + nb]]
             total_l = [int(v) for v in packed_np[2 + nb:2 + 2 * nb]]
-            hits, misses, seen, uniq = (int(v) for v in packed_np[2 + 2 * nb:])
-            st.cer_hits += hits
-            st.cer_misses += misses
-            st.dedup_keys_seen += seen
-            st.dedup_unique += uniq
+            tail = [int(v) for v in packed_np[2 + 2 * nb:]]
+            st.cer_hits += tail[0]
+            st.cer_misses += tail[1]
+            st.dedup_keys_seen += tail[2]
+            st.dedup_unique += tail[3]
+            st.fail_hits += tail[4]
+            st.fail_misses += tail[5]
+            st.fail_inserts += tail[6]
+            st.fail_pruned_rows += tail[7]
             if cursor + t < total_in:
                 stack.append((b, tile, r, cursor + t))
             # walk the ladder: consumed boundaries (single-chunk) descend
@@ -827,17 +1023,25 @@ class BatchProgram:
     idx]`, contained-vertex thresholds are per-row data, and the leaf
     reduction segment-sums per query."""
 
-    def __init__(self, sig, n_queries, *, use_cv=True, use_cer=True):
+    def __init__(self, sig, n_queries, *, use_cv=True, use_cer=True,
+                 use_fail=True):
         self.sig = sig
         _, self.t, self.widths, self._stages, self.leaf = sig
         self.nq = n_queries
         self.use_cv = use_cv
         self.use_cer = use_cer
+        self.use_fail = use_fail
         self._n_stages = len(self._stages)
         self._jit: dict = {}
         self.compiled_supersteps = 0      # fresh jit traces (bucket_recompiles)
         self._cer_stages = [si for si, stg in enumerate(self._stages)
                             if use_cer and stg[0] == "e" and stg[8] and stg[3]]
+        # failure-cache stages: same read-set requirements as CER, gated by
+        # its own knob (keys are qid-prefixed, like CER, so a recorded
+        # failure never crosses queries)
+        self._fail_stages = [si for si, stg in enumerate(self._stages)
+                             if use_fail and stg[0] == "e" and stg[8]
+                             and stg[3]]
 
     # ----------------------------------------------------------- static shape
     def dedup_slots(self, si: int) -> tuple:
@@ -990,30 +1194,39 @@ class BatchProgram:
         boundary `b` — the query-id-lane mirror of
         `TileScheduler._build_step`.
 
-        Returns (step, exit_bounds, seg_cer, n_computes, gather_ops). The
-        step's optional trailing `part` bitmap (n_queries, root_words) is
-        ANDed per query into the root extension — the sharded scheduler's
-        per-shard partition of every query's level-0 candidate rows;
-        `part=None` (single-device) leaves the root masks untouched."""
+        Returns (step, exit_bounds, seg_cer, seg_fail, n_computes,
+        gather_ops). The step's optional trailing `part` bitmap
+        (n_queries, root_words) is ANDed per query into the root extension
+        — the sharded scheduler's per-shard partition of every query's
+        level-0 candidate rows; `part=None` (single-device) leaves the
+        root masks untouched."""
         t = self.t
         cer_set = set(self._cer_stages)
+        fail_set = set(self._fail_stages)
         segs = self._ladder(b)
         exit_bounds = [exit_si for (_, _, exit_si) in segs[:-1]]
         built = []
         seg_cer: list = []
+        fail_seg: dict = {}               # fail stage -> computing segment
         gather_ops = 0
         n_computes = 0
-        for (si, bms, exit_si) in segs:
+        for ki, (si, bms, exit_si) in enumerate(segs):
             leaf_i = exit_si == self._n_stages
             chain = []
             for sj in bms + ([] if leaf_i else [exit_si]):
                 compute_r, con_key = self._make_compute_parts(sj)
                 chain.append((sj, self.dedup_slots(sj), compute_r, con_key))
                 seg_cer += [sj] if sj in cer_set else []
+                if sj in fail_set:
+                    fail_seg[sj] = ki
                 if self._stages[sj][0] == "e":
                     gather_ops += t * max(len(self._stages[sj][3]), 1)
                 n_computes += 1
             built.append((self._make_expand(si), chain, leaf_i))
+        n_bounds_before = sum(1 for j in range(b) if self._is_boundary(j))
+        fail_by_seg = _fail_plan(segs, n_bounds_before, fail_seg,
+                                 self.dedup_slots)
+        seg_fail = sorted(fail_seg)
         leaf_terms = self._make_leaf_terms()
         leaf_reduce = make_leaf_reduce_batched(
             list(self.leaf[0]), [list(g) for g in self.leaf[1]], self.nq)
@@ -1021,7 +1234,8 @@ class BatchProgram:
         if root:
             root_compute_r, root_con = self._make_compute_parts(0)
 
-        def run_compute(si, dedup, compute_r, con_key, tile, bufs, acc, data):
+        def run_compute(si, dedup, compute_r, con_key, tile, bufs, fbufs,
+                        acc, facc, data):
             if si in bufs:
                 keys = jnp.stack(
                     [tile["qid"]] + [tile["idx"][:, s] for s in dedup], axis=1)
@@ -1030,12 +1244,44 @@ class BatchProgram:
                 acc = [a + v for a, v in zip(acc, s)]
             else:
                 r, pop = compute_r(tile, data)
+            raw_pop = pop
             r, pop, ok = self._finish(tile, r, pop, con_key, data)
+            if si in fbufs:
+                # qid-prefixed failure key: per-query con thresholds and
+                # tables make the verdict a pure function of (qid, read-set)
+                fkeys = jnp.stack(
+                    [tile["qid"]] + [tile["idx"][:, s] for s in dedup],
+                    axis=1)
+                failed = tile["alive"] & ~ok
+                wit = jnp.int32(2 * si) + (raw_pop > 0).astype(jnp.int32)
+                fbufs[si], n_ins = _fail_insert(fkeys, failed, wit,
+                                                fbufs[si])
+                facc[2] = facc[2] + n_ins
             return r, pop, ok, acc
 
-        def step(tile, r_in, cursor, bufs, data, active, part=None):
+        def apply_fail_masks(k, cur, fbufs, facc):
+            # post-expansion lookup-and-mask (rank stable; see
+            # TileScheduler._build_step) — runs after the `active` mask so
+            # deactivated-query rows neither hit nor count as misses
+            if not fail_by_seg[k]:
+                return
+            alive0 = cur["alive"]
+            dead = jnp.zeros_like(alive0)
+            for (sj, slots) in fail_by_seg[k]:
+                fkeys = jnp.stack(
+                    [cur["qid"]] + [cur["idx"][:, s] for s in slots], axis=1)
+                fhit = _fail_lookup(fkeys, alive0, fbufs[sj])
+                facc[0] = facc[0] + fhit.sum().astype(jnp.int32)
+                facc[1] = facc[1] + (alive0 & ~fhit).sum().astype(jnp.int32)
+                dead = dead | fhit
+            cur["alive"] = alive0 & ~dead
+            facc[3] = facc[3] + dead.sum().astype(jnp.int32)
+
+        def step(tile, r_in, cursor, bufs, fbufs, data, active, part=None):
             bufs = dict(bufs)
+            fbufs = dict(fbufs)
             acc = [jnp.int32(0)] * 4                 # hits/misses/seen/ins
+            facc = [jnp.int32(0)] * 4                # fail h/m/ins/pruned
             if root:
                 r0, pop0 = root_compute_r(tile, data)
                 r_in, _, _ = self._finish(tile, r0, pop0, root_con, data)
@@ -1060,11 +1306,12 @@ class BatchProgram:
                     total_in = tot.astype(jnp.int32)
                 else:
                     cur["alive"] = cur["alive"] & proceed
+                apply_fail_masks(k, cur, fbufs, facc)
                 last = None
                 for (sj, dedup, compute_r, con_key) in chain:
                     r, pop, ok, acc = run_compute(sj, dedup, compute_r,
-                                                  con_key, cur, bufs, acc,
-                                                  data)
+                                                  con_key, cur, bufs, fbufs,
+                                                  acc, facc, data)
                     last = (r, pop, ok)
                     if not leaf_i and sj == chain[-1][0]:
                         break                        # exit compute: no store
@@ -1078,9 +1325,10 @@ class BatchProgram:
                                                  cur["qid"])
                     leaf_alive = cur["alive"].sum().astype(jnp.int32)
                     packed = jnp.stack(
-                        [total_in, leaf_alive, *alive_l, *total_l, *acc])
+                        [total_in, leaf_alive, *alive_l, *total_l, *acc,
+                         *facc])
                     return (cur, terms, count_q, ovf_q, packed, frontiers,
-                            bufs)
+                            bufs, fbufs)
                 r2, pop2, ok2 = last
                 alive_k = ok2.sum().astype(jnp.int32)
                 total_k = jnp.sum(pop2, dtype=jnp.int32)
@@ -1091,8 +1339,8 @@ class BatchProgram:
                 proceed = ok_here if proceed is None else (proceed & ok_here)
                 cur_tile, cur_r, cur_cursor = cur, r2, jnp.int32(0)
 
-        return (step, exit_bounds, sorted(set(seg_cer)), n_computes,
-                gather_ops)
+        return (step, exit_bounds, sorted(set(seg_cer)), seg_fail,
+                n_computes, gather_ops)
 
     def superstep(self, b: int):
         """Cached jitted wrapper of `build_step(b)`: one device dispatch
@@ -1102,9 +1350,10 @@ class BatchProgram:
         key = ("ss", b)
         if key in self._jit:
             return self._jit[key]
-        step, exit_bounds, seg_cer, n_computes, gather_ops = \
+        step, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
             self.build_step(b)
-        entry = (jax.jit(step), exit_bounds, seg_cer, n_computes, gather_ops)
+        entry = (jax.jit(step), exit_bounds, seg_cer, seg_fail, n_computes,
+                 gather_ops)
         self._jit[key] = entry
         self.compiled_supersteps += 1
         return entry
@@ -1142,11 +1391,12 @@ _PROGRAMS: "OrderedDict[tuple, BatchProgram]" = OrderedDict()
 _PROGRAMS_MAX = 32
 
 
-def _get_batch_program(sig, n_queries, *, use_cv, use_cer):
-    key = (sig, n_queries, use_cv, use_cer)
+def _get_batch_program(sig, n_queries, *, use_cv, use_cer, use_fail):
+    key = (sig, n_queries, use_cv, use_cer, use_fail)
     prog = _PROGRAMS.get(key)
     if prog is None:
-        prog = BatchProgram(sig, n_queries, use_cv=use_cv, use_cer=use_cer)
+        prog = BatchProgram(sig, n_queries, use_cv=use_cv, use_cer=use_cer,
+                            use_fail=use_fail)
         _PROGRAMS[key] = prog
         while len(_PROGRAMS) > _PROGRAMS_MAX:
             _PROGRAMS.popitem(last=False)
@@ -1165,7 +1415,9 @@ class SuperbatchScheduler:
 
     def __init__(self, plans, *, tile_rows: int = 256, use_cv: bool = True,
                  use_dedup: bool = True, use_cer_buffer: bool = True,
-                 cer_buffer_slots: int = 256, pack_tiles: bool = True):
+                 cer_buffer_slots: int = 256,
+                 use_failure_cache: bool = True,
+                 failure_cache_slots: int = 64, pack_tiles: bool = True):
         from .plan import _pow2ceil, plan_shape_signature
         if not plans:
             raise ValueError("superbatch needs at least one plan")
@@ -1181,13 +1433,21 @@ class SuperbatchScheduler:
         self.pack_tiles = pack_tiles
         self.program = _get_batch_program(
             self.sig, self.nq_pad, use_cv=use_cv,
-            use_cer=(use_dedup and use_cer_buffer))
+            use_cer=(use_dedup and use_cer_buffer),
+            use_fail=use_failure_cache)
         self.data = stack_batch_inputs(self.sig, self.plans, self.nq_pad)
         self._buffers = {
             si: _init_cer_buffer(cer_buffer_slots,
                                  1 + len(self.program.dedup_slots(si)),
                                  self.program.stage_width(si))
             for si in self.program._cer_stages}
+        self._fail_buffers = {
+            si: _init_fail_buffer(failure_cache_slots,
+                                  1 + len(self.program.dedup_slots(si)))
+            for si in self.program._fail_stages}
+        # test hook: called with the scheduler after every superstep's
+        # buffer fold-back (tests corrupt _fail_buffers mid-run through it)
+        self.fail_debug_hook = None
         self.stats = VectorStats()
 
     def _push_frontier(self, b, tile, r, alive_n, total, stack, pending):
@@ -1245,15 +1505,21 @@ class SuperbatchScheduler:
                 break
             st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
             b, tile, r, cursor = stack.pop()
-            fn, exit_bounds, seg_cer, n_computes, gather_ops = \
+            fn, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
                 prog.superstep(b)
             bufs = {si: self._buffers[si] for si in seg_cer}
+            fbufs = {si: self._fail_buffers[si] for si in seg_fail}
             with enable_x64():                       # leaf reduce is int64
-                leaf_tile, terms, cnt_q, ovf_q, packed, frontiers, bufs2 = fn(
-                    tile, r, jnp.int32(cursor), bufs, self.data, active)
+                (leaf_tile, terms, cnt_q, ovf_q, packed, frontiers, bufs2,
+                 fbufs2) = fn(tile, r, jnp.int32(cursor), bufs, fbufs,
+                              self.data, active)
             packed_np, cnt_np, ovf_np = jax.device_get((packed, cnt_q, ovf_q))
             for si in seg_cer:
                 self._buffers[si] = bufs2[si]
+            for si in seg_fail:
+                self._fail_buffers[si] = fbufs2[si]
+            if self.fail_debug_hook is not None:
+                self.fail_debug_hook(self)
             st.device_steps += 1
             st.supersteps += 1
             st.tiles += 1
@@ -1265,12 +1531,15 @@ class SuperbatchScheduler:
             leaf_alive = int(packed_np[1])
             alive_l = [int(v) for v in packed_np[2:2 + nb]]
             total_l = [int(v) for v in packed_np[2 + nb:2 + 2 * nb]]
-            hits, misses, seen, uniq = (int(v)
-                                        for v in packed_np[2 + 2 * nb:])
-            st.cer_hits += hits
-            st.cer_misses += misses
-            st.dedup_keys_seen += seen
-            st.dedup_unique += uniq
+            tail = [int(v) for v in packed_np[2 + 2 * nb:]]
+            st.cer_hits += tail[0]
+            st.cer_misses += tail[1]
+            st.dedup_keys_seen += tail[2]
+            st.dedup_unique += tail[3]
+            st.fail_hits += tail[4]
+            st.fail_misses += tail[5]
+            st.fail_inserts += tail[6]
+            st.fail_pruned_rows += tail[7]
             if cursor + t < total_in:
                 stack.append((b, tile, r, cursor + t))
             reached_leaf = True

@@ -159,25 +159,26 @@ class _ShardLoopBase:
             self._shard_jit = {}
         if b in self._shard_jit:
             return self._shard_jit[b]
-        step, exit_bounds, seg_cer, n_computes, gather_ops = \
+        step, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
             self._lane_step(b)
 
-        def body(tile, r, cursor, bufs, part, aux1, aux2):
+        def body(tile, r, cursor, bufs, fbufs, part, aux1, aux2):
             sq = lambda tr: jax.tree.map(lambda x: x[0], tr)  # noqa: E731
-            leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2 = step(
-                sq(tile), r[0], cursor[0], sq(bufs), aux1, aux2,
-                part=part[0])
+            (leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2,
+             fbufs2) = step(sq(tile), r[0], cursor[0], sq(bufs), sq(fbufs),
+                            aux1, aux2, part=part[0])
             total = jax.lax.psum(cnt, "data")
             ex = lambda tr: jax.tree.map(lambda x: x[None], tr)  # noqa: E731
             return (ex(leaf_tile), terms[None], cnt[None], ovf[None],
-                    packed[None], ex(frontiers), ex(bufs2), total)
+                    packed[None], ex(frontiers), ex(bufs2), ex(fbufs2),
+                    total)
 
         fn = jax.jit(shard_map(
             body, self.mesh,
-            in_specs=(_SH, _SH, _SH, _SH, _SH, P(), P()),
-            out_specs=(_SH, _SH, _SH, _SH, _SH, _SH, _SH, P()),
+            in_specs=(_SH, _SH, _SH, _SH, _SH, _SH, P(), P()),
+            out_specs=(_SH, _SH, _SH, _SH, _SH, _SH, _SH, _SH, P()),
             check_rep=False))
-        entry = (fn, exit_bounds, seg_cer, n_computes, gather_ops)
+        entry = (fn, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops)
         self._shard_jit[b] = entry
         return entry
 
@@ -189,19 +190,25 @@ class _ShardLoopBase:
         n_real = len(lanes)
         while len(lanes) < S:
             lanes.append(self._dead_item(lanes[0]))
-        fn, exit_bounds, seg_cer, n_computes, gather_ops = self._shard_fn(b)
+        (fn, exit_bounds, seg_cer, seg_fail, n_computes,
+         gather_ops) = self._shard_fn(b)
         tiles = _lane_stack([l[1] for l in lanes])
         rs = jnp.stack([l[2] for l in lanes])
         cursors = jnp.asarray([l[3] for l in lanes], dtype=jnp.int32)
         parts = jnp.stack([l[5] for l in lanes])
         bufs = {si: self._buffers[si] for si in seg_cer}
+        fbufs = {si: self._fail_buffers[si] for si in seg_fail}
         with enable_x64():                           # leaf reduce is int64
-            (leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2,
-             total) = fn(tiles, rs, cursors, bufs, parts, aux1, aux2)
+            (leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2, fbufs2,
+             total) = fn(tiles, rs, cursors, bufs, fbufs, parts, aux1, aux2)
         packed_np, cnt_np, ovf_np, total_np = jax.device_get(
             (packed, cnt, ovf, total))
         for si in seg_cer:
             self._buffers[si] = bufs2[si]
+        for si in seg_fail:
+            self._fail_buffers[si] = fbufs2[si]
+        if self.fail_debug_hook is not None:
+            self.fail_debug_hook(self)
         st = self.stats
         st.device_steps += 1
         st.supersteps += 1
@@ -221,11 +228,15 @@ class _ShardLoopBase:
         nb = len(exit_bounds)
         alive_l = [int(v) for v in row[2:2 + nb]]
         total_l = [int(v) for v in row[2 + nb:2 + 2 * nb]]
-        hits, misses, seen, uniq = (int(v) for v in row[2 + 2 * nb:])
-        st.cer_hits += hits
-        st.cer_misses += misses
-        st.dedup_keys_seen += seen
-        st.dedup_unique += uniq
+        tail = [int(v) for v in row[2 + 2 * nb:]]
+        st.cer_hits += tail[0]
+        st.cer_misses += tail[1]
+        st.dedup_keys_seen += tail[2]
+        st.dedup_unique += tail[3]
+        st.fail_hits += tail[4]
+        st.fail_misses += tail[5]
+        st.fail_inserts += tail[6]
+        st.fail_pruned_rows += tail[7]
         for k in range(nb):
             st.rows_alive += alive_l[k]
             if alive_l[k] == 0:                      # dead end
@@ -265,6 +276,10 @@ class ShardedTileScheduler(_ShardLoopBase, TileScheduler):
         self._buffers = {
             si: jax.tree.map(lambda x: jnp.stack([x] * S), buf)
             for si, buf in self._buffers.items()}
+        # ditto for the failure-reuse negative cache (per-lane ring buffers)
+        self._fail_buffers = {
+            si: jax.tree.map(lambda x: jnp.stack([x] * S), buf)
+            for si, buf in self._fail_buffers.items()}
         plan = eng.plan
         parts, counts = partition_bitmap(
             np.asarray(plan.masks[plan.root_vertex]),
@@ -381,6 +396,9 @@ class ShardedSuperbatchScheduler(_ShardLoopBase, SuperbatchScheduler):
         self._buffers = {
             si: jax.tree.map(lambda x: jnp.stack([x] * S), buf)
             for si, buf in self._buffers.items()}
+        self._fail_buffers = {
+            si: jax.tree.map(lambda x: jnp.stack([x] * S), buf)
+            for si, buf in self._fail_buffers.items()}
         mask = np.asarray(self.data["mask_root"])            # (Q, W0)
         w_tabs = [np.asarray(v) for k, v in self.data["tables"].items()
                   if k.startswith("0:")]

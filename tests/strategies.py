@@ -21,6 +21,9 @@ Hypothesis (available when `HAS_HYPOTHESIS`):
                          regimes for batched-vs-sequential differentials
   delta_regime()       — (seed, directed, n_edge_labels, n_deltas, op mix)
                          regimes for streaming apply_delta differentials
+  failure_cache_regime() — (seed, qsize, slots, tile_rows, use_cer_buffer,
+                         use_dedup) regimes for the negative-cache on/off
+                         differential
 """
 from __future__ import annotations
 
@@ -39,7 +42,8 @@ except ImportError:                                        # pragma: no cover
 
 __all__ = ["fig1_pair", "random_pair", "brother_workload", "batch_workload",
            "delta_workload", "HAS_HYPOTHESIS", "small_graph_pair",
-           "graph_regime", "workload_regime", "delta_regime"]
+           "graph_regime", "workload_regime", "delta_regime",
+           "failure_cache_regime"]
 
 
 # ------------------------------------------------------------- deterministic
@@ -213,9 +217,23 @@ if HAS_HYPOTHESIS:
         cer_buffer_slots = draw(st.sampled_from([2, 256]))
         return (seed, n_queries, dup, tile_rows, use_cer_buffer,
                 cer_buffer_slots)
+
+    @st.composite
+    def failure_cache_regime(draw):
+        """Knobs for one negative-cache on/off differential run: deep-ish
+        random queries (qsize up to 6 so eligible extend stages actually
+        fail), tiny ring capacities to force wraparound, and the CER /
+        dedup toggles the cache must compose with."""
+        seed = draw(st.integers(0, 2**15 - 1))
+        qsize = draw(st.integers(4, 6))
+        slots = draw(st.sampled_from([1, 2, 256]))
+        tile_rows = draw(st.sampled_from([8, 32, 128]))
+        use_cer_buffer = draw(st.booleans())
+        use_dedup = draw(st.booleans())
+        return seed, qsize, slots, tile_rows, use_cer_buffer, use_dedup
 else:                                                      # pragma: no cover
     def _needs_hypothesis(*_a, **_kw):
         raise RuntimeError("hypothesis is not installed")
 
     small_graph_pair = graph_regime = workload_regime = _needs_hypothesis
-    delta_regime = _needs_hypothesis
+    delta_regime = failure_cache_regime = _needs_hypothesis
