@@ -1,7 +1,8 @@
 .PHONY: verify test test-tier2 bench bench-baseline perf-smoke compile-bench \
 	compile-smoke batch-bench batch-smoke shard-test shard-bench \
-	shard-smoke delta-bench delta-smoke serve-bench serve-smoke \
-	fail-bench fail-smoke chaos-smoke coverage docs-check
+	shard-smoke overlap-test overlap-smoke delta-bench delta-smoke \
+	serve-bench serve-smoke fail-bench fail-smoke chaos-smoke coverage \
+	docs-check
 
 verify:
 	bash scripts/ci.sh
@@ -51,6 +52,14 @@ shard-bench:
 
 shard-smoke: shard-bench
 	PYTHONPATH=src python scripts/perf_smoke.py --shard /tmp/BENCH_shard_new.json benchmarks/BENCH_shard.json
+
+# overlapped supersteps: on/off bit-identity differential + break-even gate
+# (reuses the shard bench rows: shard.<ds>.overlap vs shard.<ds>.seq)
+overlap-test:
+	PYTHONPATH=src XLA_FLAGS="--xla_force_host_platform_device_count=4" python -m pytest -q tests/test_overlap.py tests/test_mesh_auto.py
+
+overlap-smoke: shard-bench
+	PYTHONPATH=src python scripts/perf_smoke.py --overlap /tmp/BENCH_shard_new.json benchmarks/BENCH_shard.json
 
 # streaming deltas: incremental count maintenance vs full recount
 delta-bench:

@@ -4,21 +4,33 @@ Evidence for the sharded scheduler's acceptance criterion: on
 enumeration-bound fig7 workloads (the shared `fig7_workloads` mix, larger
 query sizes so enumeration dominates dispatch), warm per-query time for
 
-  * `seq`     — the single-device fused scheduler (mesh=None),
-  * `sharded` — the same queries with `mesh="auto"` over 4 forced host
-    devices (`XLA_FLAGS=--xla_force_host_platform_device_count=4`, set by
-    this module before jax loads, exactly like `launch/dryrun.py`).
+  * `seq`     — the single-device scheduler, synchronous readbacks
+    (mesh=None, overlap=False),
+  * `sharded` — the same queries forced onto a 4-lane mesh (explicit
+    mesh=4 over 4 forced host devices,
+    `XLA_FLAGS=--xla_force_host_platform_device_count=4`, set by this
+    module before jax loads, exactly like `launch/dryrun.py`), still
+    synchronous,
+  * `overlap` — mesh="auto" with double-buffered supersteps
+    (overlap=True, the production default): the cost model picks the
+    mesh — on an oversubscribed CPU container it refuses to shard and
+    this row is the overlapped single-device path,
+  * `sharded_overlap` — explicit mesh=4 plus overlap, the overlapped
+    sharded path.
 
 Rows: shard.<dataset>.<mode>,us_per_query,count=..;dispatches_per_query=..
-(sharded rows add shard_lanes=..;shard_rebalances=..). The JSON header
-records `devices`/`mesh_shape` so baselines are comparable across hosts.
+(+readbacks_per_query=.. for overlap rows; mesh rows add
+shard_lanes=..;shard_rebalances=..). The JSON header records
+`devices`/`mesh_shape` so baselines are comparable across hosts.
 
   PYTHONPATH=src python -m benchmarks.shard_bench                 # print CSV
   PYTHONPATH=src python -m benchmarks.shard_bench --json [PATH]   # + JSON
                                                  (default BENCH_shard.json)
 
 `scripts/perf_smoke.py --shard` gates the same-host sharded/seq ratio
-(mean >= 1.5x speedup, no dataset regressing past the tripwire) against
+(mean >= 1.5x speedup, no dataset regressing past the tripwire) and
+`--overlap` gates the overlap/seq ratio (overlap must never lose to the
+synchronous path beyond the noise floor, counts bit-identical) against
 the committed benchmarks/BENCH_shard.json baseline.
 """
 from __future__ import annotations
@@ -52,9 +64,12 @@ def shard_throughput(scale=0.03, limit=200_000, rounds=3):
         if not queries:
             continue
         m = matcher_for(data)
-        for label, mesh in (("seq", None), ("sharded", "auto")):
+        modes = (("seq", None, False), ("sharded", N_DEVICES, False),
+                 ("overlap", "auto", True),
+                 ("sharded_overlap", N_DEVICES, True))
+        for label, mesh, overlap in modes:
             opts = MatchOptions(engine="vector", tile_rows=512, limit=limit,
-                                mesh=mesh)
+                                mesh=mesh, overlap=overlap)
             outs = [m.count(q, opts) for q in queries]   # warm compile + jit
             best, derived = None, ""
             for _ in range(rounds):
@@ -67,10 +82,14 @@ def shard_throughput(scale=0.03, limit=200_000, rounds=3):
                     derived = (f"count={sum(o.count for o in outs)}"
                                f";dispatches_per_query="
                                f"{steps / len(queries):.2f}")
-                    if mesh is not None:
+                    if overlap:
+                        rb = sum(o.stats.readbacks for o in outs)
+                        derived += (f";readbacks_per_query="
+                                    f"{rb / len(queries):.2f}")
+                    lanes = sum(o.stats.shard_lanes for o in outs)
+                    if lanes:
                         derived += (
-                            f";shard_lanes="
-                            f"{sum(o.stats.shard_lanes for o in outs)}"
+                            f";shard_lanes={lanes}"
                             f";shard_rebalances="
                             f"{sum(o.stats.shard_rebalances for o in outs)}")
             rows.append(bench_row(f"shard.{name}.{label}",

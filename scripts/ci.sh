@@ -66,11 +66,13 @@ python scripts/perf_smoke.py --serve "$serve_json" benchmarks/BENCH_serve.json
 echo "== chaos smoke (worker SIGKILL + hang injection, live pool) =="
 python scripts/perf_smoke.py --chaos
 
-echo "== shard differential (4 forced host devices) =="
-# sharded == sequential == ref across the strategy workloads; runs in its
-# own process because the device count must be fixed before jax loads
+echo "== shard + overlap differential (4 forced host devices) =="
+# sharded == sequential == ref and overlap-on == overlap-off (counts AND
+# stats) across the strategy workloads; runs in its own process because
+# the device count must be fixed before jax loads
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python -m pytest -q tests/test_shard_differential.py \
+    tests/test_overlap.py tests/test_mesh_auto.py \
     tests/test_failure_cache.py::test_sharded_parity \
     tests/test_failure_cache.py::test_sharded_superbatch_parity
 
@@ -81,6 +83,10 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 
 echo "== shard smoke (sharded/seq speedup gate) =="
 python scripts/perf_smoke.py --shard "$shard_json" benchmarks/BENCH_shard.json
+
+echo "== overlap smoke (overlap/seq break-even + count-exactness gate) =="
+# reuses the shard bench rows: shard.<ds>.overlap vs shard.<ds>.seq
+python scripts/perf_smoke.py --overlap "$shard_json" benchmarks/BENCH_shard.json
 
 echo "== coverage report (core engine; non-blocking) =="
 # Informational only: line coverage over src/repro/core from the engine

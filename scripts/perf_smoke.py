@@ -8,6 +8,7 @@ Usage: python scripts/perf_smoke.py NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --compile NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --batch NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --shard NEW.json [BASELINE.json]
+       python scripts/perf_smoke.py --overlap NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --delta NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --serve NEW.json [BASELINE.json]
        python scripts/perf_smoke.py --fail NEW.json [BASELINE.json]
@@ -80,6 +81,23 @@ this mean at CI scale). Datasets whose full-recount row sits below
 DELTA_FLOOR_US per update are fixed-cost dominated (the recount itself is
 sub-ms) and are skipped; the committed-baseline ratio prints for context
 only.
+
+Overlap mode: both files are `benchmarks.shard_bench --json` outputs —
+the gate reuses the shard bench's four-row matrix, judging
+shard.<ds>.overlap against shard.<ds>.seq. Two gated properties per
+dataset. First, exactness (always enforced, no floor): the `count=`
+derived field of the overlap row must equal the seq row's bit-for-bit —
+double-buffered supersteps may only change *when* readbacks happen,
+never what is counted. Second, timing: overlap coalesces device
+readbacks behind dispatch, so above the OVERLAP_FLOOR_US noise floor
+the ratio overlap_us / seq_us must stay <= OVERLAP_RATIO_MAX (overlap
+must at least break even with the synchronous path; the headroom only
+absorbs timer noise, not a real regression — losing to synchronous
+means the double-buffering is dead weight). Datasets below the floor
+are dispatch-overhead measurements with no overlap signal and pass with
+a notice. There is no oversubscription caveat here: unlike sharding,
+overlap needs no second core — hiding host readback latency behind
+device compute works on a single core.
 
 Shard mode: both files are `benchmarks.shard_bench --json` outputs (rows
 shard.<ds>.seq / shard.<ds>.sharded, produced under 4 forced host
@@ -162,6 +180,11 @@ SHARD_REGRESS_MAX = 1.25         # no dataset may run >25% slower sharded
 SHARD_FLOOR_US = 5000.0          # per-query; below this the workload is a
                                  # single-dispatch overhead measurement,
                                  # not enumeration-bound — no shard signal
+OVERLAP_RATIO_MAX = 1.10         # overlap/seq per dataset: overlap must at
+                                 # least break even (headroom = timer noise)
+OVERLAP_FLOOR_US = 3000.0        # per-query; below this both rows measure
+                                 # single-dispatch overhead (nothing to
+                                 # overlap), no signal — counts still gated
 FAIL_SPEEDUP_MIN = 1.2           # mean speedup, cache on vs off — enforced
                                  # only above the reuse-volume signal
 FAIL_REGRESS_MAX = 1.5           # no judged dataset may run >50% slower
@@ -245,6 +268,31 @@ def shard_ratios(rows: dict) -> dict[str, tuple[float, float, float]]:
             continue
         out[ds] = (row["us_per_call"] / max(seq["us_per_call"], 1e-9),
                    row["us_per_call"], seq["us_per_call"])
+    return out
+
+
+def overlap_ratios(rows: dict) -> dict[str, tuple[float, float, float,
+                                                  str, str]]:
+    """dataset -> (overlap/seq ratio, overlap us, seq us,
+    overlap count=, seq count=)."""
+    def count_of(row) -> str:
+        for part in row.get("derived", "").split(";"):
+            if part.startswith("count="):
+                return part[len("count="):]
+        return ""
+
+    out = {}
+    for name, row in rows.items():
+        parts = name.split(".")
+        if len(parts) != 3 or parts[0] != "shard" or parts[2] != "overlap":
+            continue
+        ds = parts[1]
+        seq = rows.get(f"shard.{ds}.seq")
+        if not seq:
+            continue
+        out[ds] = (row["us_per_call"] / max(seq["us_per_call"], 1e-9),
+                   row["us_per_call"], seq["us_per_call"],
+                   count_of(row), count_of(seq))
     return out
 
 
@@ -559,6 +607,46 @@ def main_shard(new_path: str, base_path: str) -> int:
     return 1 if (failed or not mean_ok) else 0
 
 
+def main_overlap(new_path: str, base_path: str) -> int:
+    """Gate the overlap/seq per-query ratio + count exactness (see module
+    docstring)."""
+    new = overlap_ratios(load(new_path))
+    base = overlap_ratios(load(base_path))
+    if not new:
+        print("perf-smoke: no shard.<ds>.seq/overlap row pairs found; "
+              "did benchmarks.shard_bench run with --json?")
+        return 2
+    failed = False
+    notice = False
+    for ds, (ratio, ovl_us, seq_us, ovl_count, seq_count) in \
+            sorted(new.items()):
+        ctx = (f" (baseline {base[ds][0]:.3f})" if ds in base else "")
+        if not ovl_count or ovl_count != seq_count:
+            # exactness is gated regardless of the noise floor: a count
+            # divergence is a correctness bug, not a timing artifact
+            verdict = (f"FAIL (counts diverged: overlap {ovl_count or '?'} "
+                       f"!= seq {seq_count or '?'})")
+            failed = True
+        elif seq_us < OVERLAP_FLOOR_US:
+            verdict = "ok (below noise floor)"
+            notice = True
+        elif ratio > OVERLAP_RATIO_MAX:
+            verdict = "FAIL (overlap slower than synchronous readbacks)"
+            failed = True
+        else:
+            verdict = "ok"
+        print(f"perf-smoke: overlap {ds}: overlap/seq {ratio:.3f} "
+              f"({seq_us / max(ovl_us, 1e-9):.2f}x, "
+              f"limit {OVERLAP_RATIO_MAX:.2f}){ctx} {verdict}")
+    if failed:
+        return 1
+    if notice:
+        print("perf-smoke: overlap: pass with notice — some dataset(s) "
+              "below the noise floor; counts gated, timing unjudgeable "
+              "there")
+    return 0
+
+
 def main_batch(new_path: str, base_path: str) -> int:
     new = batch_ratios(load(new_path))
     base = batch_ratios(load(base_path))
@@ -636,8 +724,8 @@ def main() -> int:
     if "--chaos" in sys.argv[1:]:
         return main_chaos()
     args = [a for a in sys.argv[1:]
-            if a not in ("--compile", "--batch", "--shard", "--delta",
-                         "--serve", "--fail")]
+            if a not in ("--compile", "--batch", "--shard", "--overlap",
+                         "--delta", "--serve", "--fail")]
     if not args:
         print(__doc__)
         return 2
@@ -650,6 +738,9 @@ def main() -> int:
     if "--shard" in sys.argv[1:]:
         return main_shard(args[0], args[1] if len(args) > 1 else
                           "benchmarks/BENCH_shard.json")
+    if "--overlap" in sys.argv[1:]:
+        return main_overlap(args[0], args[1] if len(args) > 1 else
+                            "benchmarks/BENCH_shard.json")
     if "--delta" in sys.argv[1:]:
         return main_delta(args[0], args[1] if len(args) > 1 else
                           "benchmarks/BENCH_delta.json")

@@ -35,7 +35,7 @@ from repro.core.plan import build_plan
 from repro.core.ref_engine import cemr_match, preprocess
 
 from .dataset import Dataset
-from .options import BATCH_MODES, MatchOptions
+from .options import BATCH_MODES, MatchOptions, auto_mesh_devices
 from .signature import graph_signature
 
 __all__ = ["Matcher", "CompiledQuery", "MatchOutcome", "CacheInfo",
@@ -123,7 +123,8 @@ class CompiledQuery:
         key = (opts.tile_rows, opts.use_cv, opts.use_dedup,
                opts.use_cer_buffer, opts.cer_buffer_slots,
                opts.use_failure_cache, opts.failure_cache_slots,
-               opts.pack_tiles, opts.intersect, id(intersect_fn), mesh)
+               opts.pack_tiles, opts.overlap, opts.intersect,
+               id(intersect_fn), mesh)
         eng = self._engines.get(key)
         if eng is None:
             eng = VectorEngine(self.cs, self.an, tile_rows=opts.tile_rows,
@@ -133,6 +134,7 @@ class CompiledQuery:
                                use_failure_cache=opts.use_failure_cache,
                                failure_cache_slots=opts.failure_cache_slots,
                                pack_tiles=opts.pack_tiles,
+                               overlap=opts.overlap,
                                intersect=opts.intersect,
                                intersect_fn=intersect_fn, plan=self.plan,
                                mesh=mesh)
@@ -283,18 +285,34 @@ class Matcher:
         base = options if options is not None else self.options
         return base.replace(**overrides) if overrides else base
 
-    def _resolve_mesh(self, opts: MatchOptions):
+    def _resolve_mesh(self, opts: MatchOptions,
+                      total_rows: int | None = None):
         """Resolve `opts.mesh` ("auto" | device count | None) to a jax Mesh
         for sharded enumeration, or None for the single-device path.
-        Resolved meshes are memoized per option value; a host with one
-        device always resolves to None (bit-identical fallback)."""
+        "auto" is cost-based (`options.auto_mesh_devices`): it shards
+        across every local device only when the workload — `total_rows`
+        candidate rows; None = size unknown, assume large — is big enough
+        to beat the shard tax on this host, so small queries never pay
+        it. Resolved meshes are memoized per device count; counts <= 1
+        always resolve to None (bit-identical fallback)."""
         if opts.mesh is None:
             return None
-        if opts.mesh not in self._meshes:
+        if opts.mesh == "auto":
+            import os
+
+            import jax
+            n = auto_mesh_devices(total_rows,
+                                  n_devices=jax.local_device_count(),
+                                  cpu_count=os.cpu_count() or 1,
+                                  platform=jax.default_backend())
+            if n <= 1:
+                return None
+        else:
+            n = opts.mesh
+        if n not in self._meshes:
             from repro.launch.mesh import make_enum_mesh
-            self._meshes[opts.mesh] = make_enum_mesh(
-                None if opts.mesh == "auto" else opts.mesh)
-        return self._meshes[opts.mesh]
+            self._meshes[n] = make_enum_mesh(n)
+        return self._meshes[n]
 
     # ---------------------------------------------------------------- compile
     def compile(self, query: Graph, options: MatchOptions | None = None,
@@ -414,8 +432,10 @@ class Matcher:
                                compile_s=compile_s, graph_version=gv,
                                engine_requested=opts.engine)
         else:
-            eng = cq.vector_engine(opts, intersect_fn=self._intersect_fn,
-                                   mesh=self._resolve_mesh(opts))
+            eng = cq.vector_engine(
+                opts, intersect_fn=self._intersect_fn,
+                mesh=self._resolve_mesh(
+                    opts, total_rows=int(cq.cs.sizes().sum())))
             t0 = time.perf_counter()
             res = eng.run(limit=opts.limit, max_steps=opts.budget,
                           materialize=opts.materialize)
@@ -542,11 +562,12 @@ class Matcher:
         """Build (or reuse) the warm superbatch scheduler for one shape
         bucket; a resolved multi-device mesh selects the sharded variant
         (superbatch query-id lanes compose with the shard axis)."""
-        mesh = self._resolve_mesh(opts)
+        mesh = self._resolve_mesh(
+            opts, total_rows=sum(int(cq.cs.sizes().sum()) for cq in cqs))
         key = (sig, tuple(id(cq.plan) for cq in cqs), opts.use_cv,
                opts.use_dedup, opts.use_cer_buffer, opts.cer_buffer_slots,
                opts.use_failure_cache, opts.failure_cache_slots,
-               opts.pack_tiles, mesh)
+               opts.pack_tiles, opts.overlap, mesh)
         sched = self._batch_cache.get(key)
         if sched is None:
             kw = dict(tile_rows=opts.tile_rows, use_cv=opts.use_cv,
@@ -555,7 +576,7 @@ class Matcher:
                       cer_buffer_slots=opts.cer_buffer_slots,
                       use_failure_cache=opts.use_failure_cache,
                       failure_cache_slots=opts.failure_cache_slots,
-                      pack_tiles=opts.pack_tiles)
+                      pack_tiles=opts.pack_tiles, overlap=opts.overlap)
             plans = [cq.plan for cq in cqs]
             if mesh is not None:
                 from repro.core.shard import ShardedSuperbatchScheduler

@@ -15,7 +15,8 @@ import dataclasses
 from repro.core.plan import INTERSECT_MODES
 
 __all__ = ["MatchOptions", "ENGINES", "ENCODINGS", "ORDER_HEURISTICS",
-           "INTERSECT_MODES", "BATCH_MODES"]
+           "INTERSECT_MODES", "BATCH_MODES", "SHARD_AUTO_MIN_ROWS",
+           "auto_mesh_devices"]
 
 ENGINES = ("ref", "vector", "auto")
 ENCODINGS = ("cost", "all_black", "all_white", "case12")
@@ -24,6 +25,42 @@ ORDER_HEURISTICS = ("cemr", "ri", "gql")
 # drains vector-engine queries through cross-query superbatches bucketed by
 # plan shape signature; "off" forces the sequential per-query path.
 BATCH_MODES = ("auto", "off")
+
+# mesh="auto" cost model: below this many total candidate rows the shard
+# tax (host-side rebalance + per-superstep lane padding) always exceeds
+# the parallel win, so auto resolves to the single-device path. The value
+# encodes the BENCH_shard.json observation that even dblp-sized candidate
+# spaces lose 3x when forced onto a 4-lane mesh of a 2-core host.
+SHARD_AUTO_MIN_ROWS = 4096
+
+
+def auto_mesh_devices(total_rows: int | None, *, n_devices: int,
+                      cpu_count: int, platform: str,
+                      min_rows: int = SHARD_AUTO_MIN_ROWS) -> int:
+    """Cost-based device count for ``mesh="auto"``: how many mesh lanes a
+    workload of `total_rows` candidate rows should shard across.
+
+    Returns 0 (→ single-device path) whenever sharding cannot win:
+
+      * one visible device — nothing to shard across;
+      * a CPU host whose physical core count does not exceed the visible
+        (possibly XLA-forced) device count — the "mesh lanes" would be
+        timeshared threads, so every lane of padding is pure overhead
+        (the BENCH_shard dblp regression: 4 forced devices on 2 cores);
+      * fewer than `min_rows` total candidate rows — the per-superstep
+        shard tax exceeds the work that can be spread.
+
+    `total_rows=None` means the caller cannot size the workload; it is
+    treated as large (shard if the hardware allows), preserving the old
+    every-device behavior for sizeless call sites.
+    """
+    if n_devices <= 1:
+        return 0
+    if platform == "cpu" and cpu_count <= n_devices:
+        return 0
+    if total_rows is not None and total_rows < min_rows:
+        return 0
+    return n_devices
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,14 +94,26 @@ class MatchOptions:
     failure_cache_slots: ring-buffer capacity per fail-cache-enabled stage.
     pack_tiles      : merge sub-capacity sibling frontiers before dispatch
                       (frontier compaction; vector engine only).
+    overlap         : double-buffered supersteps (vector engine): dispatch
+                      superstep N+1 before reading back N and coalesce the
+                      readbacks. Changes only *when* host syncs happen,
+                      never what is computed — counts and stats (modulo the
+                      readbacks/overlapped_supersteps counters) are
+                      bit-identical to overlap=False; see docs/engine.md
+                      §Overlapped supersteps.
     intersect       : intersect kernel — "auto" (Pallas compiled on TPU, jnp
                       oracle elsewhere), "pallas" (force the kernel;
-                      interpret-mode off-TPU), or "jnp".
+                      interpret-mode off-TPU), "jnp", or "fused" (fold the
+                      boundary expand+intersect+popcount into one autotuned
+                      Pallas kernel).
     mesh            : multi-device sharded enumeration (vector engine):
-                      None = single device (default), "auto" = every local
-                      device, an int = that many devices. Resolved sizes of
-                      1 fall back bit-identically to the single-device
-                      path; see docs/engine.md §Sharded enumeration.
+                      None = single device (default), "auto" = cost-based
+                      (shard across every local device only when
+                      `auto_mesh_devices` judges the workload big enough to
+                      beat the shard tax), an int = that many devices.
+                      Resolved sizes of 1 fall back bit-identically to the
+                      single-device path; see docs/engine.md §Sharded
+                      enumeration.
     limit           : stop after this many embeddings.
     delta_limit     : cap on the embeddings a `Matcher.count_delta` pinned
                       enumeration may visit per side (created/destroyed);
@@ -90,6 +139,7 @@ class MatchOptions:
     use_failure_cache: bool = True
     failure_cache_slots: int = 64
     pack_tiles: bool = True
+    overlap: bool = True
     intersect: str = "auto"
     mesh: str | int | None = None
     limit: int = 1_000_000
@@ -125,6 +175,9 @@ class MatchOptions:
                 or self.failure_cache_slots < 1):
             raise ValueError(f"failure_cache_slots must be a positive int, "
                              f"got {self.failure_cache_slots!r}")
+        if not isinstance(self.overlap, bool):
+            raise ValueError(f"overlap must be a bool, "
+                             f"got {self.overlap!r}")
         if self.mesh is not None and self.mesh != "auto" and (
                 not isinstance(self.mesh, int) or isinstance(self.mesh, bool)
                 or self.mesh < 1):

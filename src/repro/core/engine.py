@@ -85,6 +85,11 @@ class VectorStats:
     leaf_tiles: int = 0
     leaf_overflows: int = 0          # uint64 leaf reductions that fell back to host
     peak_stack: int = 0
+    readbacks: int = 0               # host sync points (device_get calls) on the
+                                     # fused/sharded superstep paths; overlap
+                                     # coalesces them: readbacks <= supersteps
+    overlapped_supersteps: int = 0   # supersteps dispatched while an earlier
+                                     # dispatch's readback was still outstanding
 
     @property
     def dedup_ratio(self) -> float:
@@ -136,6 +141,8 @@ def _resolve_intersect_fn(intersect: str):
     from repro.kernels import ops as _kops
     if intersect == "pallas" or (intersect == "auto" and _kops.on_tpu()):
         return _kops.make_intersect_fn(use_pallas=True)
+    # "fused" routes the boundary expand+intersect through the fused Pallas
+    # kernel (engine._make_expand_fused); the remaining computes stay jnp
     return None
 
 
@@ -149,7 +156,7 @@ class VectorEngine:
                  use_cer_buffer: bool = True, cer_buffer_slots: int = 256,
                  use_failure_cache: bool = True,
                  failure_cache_slots: int = 64,
-                 pack_tiles: bool = True, mesh=None):
+                 pack_tiles: bool = True, mesh=None, overlap: bool = True):
         # `plan` lets a session layer (repro.api.Matcher) build the plan once
         # and share it across engine configurations. `mesh` is a jax Mesh
         # with a "data" axis (launch.mesh.make_enum_mesh); size > 1 selects
@@ -167,6 +174,11 @@ class VectorEngine:
         self.failure_cache_slots = failure_cache_slots
         self.pack_tiles = pack_tiles
         self.mesh = mesh
+        # overlap only changes *when* superstep readbacks happen (deferred /
+        # coalesced device_get), never what is computed — the schedulers
+        # share one claim-and-dispatch discipline for both settings
+        self.overlap = overlap
+        self.fused_expand = intersect == "fused" and intersect_fn is None
         if intersect_fn is None:
             intersect_fn = _resolve_intersect_fn(intersect)
         self.intersect_fn = intersect_fn  # pluggable kernel (Pallas ops)
@@ -270,7 +282,7 @@ class VectorEngine:
         pop = jnp.where(ok, pop, 0)
         return r, pop, ok
 
-    def _make_expand(self, si: int):
+    def _make_expand(self, si: int, *, with_sel: bool = False):
         stage = self._stages[si]
         t_out = self.t
         if stage[0] == "decompose":
@@ -301,9 +313,55 @@ class VectorEngine:
                     g = bitops.clear_bit_rows(g, bitpos)
                 alive = alive & (bitops.row_popcount(g) > 0)
                 bm_out[u] = g
-            return {"idx": idx, "bm": bm_out, "alive": alive}, total
+            out = {"idx": idx, "bm": bm_out, "alive": alive}
+            if with_sel:
+                # expose the raw bit selection so the fused Pallas kernel
+                # can double-indirect through (rows, bitpos) itself
+                return out, total, rows, bitpos
+            return out, total
 
         return expand
+
+    def _make_expand_fused(self, si: int, sj: int):
+        """Fused expand+intersect+popcount across the boundary between
+        expand stage `si` and the extend stage `sj` that follows it: one
+        Pallas kernel consumes the bit selection straight from
+        `bitops.expand_select` and produces the child intersection
+        (R, pop) without materializing the per-pair gathered rows.
+
+        Returns None when the fused path is off (`intersect != "fused"`)
+        or the stage pair is ineligible (root / union / decompose
+        extends have no backward-pair intersection to fuse). The kernel
+        never masks dead rows — (R, pop) must stay a pure function of
+        the key columns so CER cache entries remain sound;
+        `finish_compute` masks downstream, exactly like the jnp path."""
+        if not self.fused_expand:
+            return None
+        stage = self._stages[sj]
+        if stage[0] != "extend":
+            return None
+        op: LevelOp = stage[1]
+        if op.level == 0 or not op.bk_pairs:
+            return None
+        from repro.kernels import ops as _kops
+        pairs = [(s, u, op.vertex) for (s, u) in op.bk_pairs]
+        slots = tuple(s for (s, _, _) in pairs)
+        wb = _kops.autotune_words_per_block(len(pairs), op.n_words)
+        fused_fn = _kops.make_fused_expand_intersect_fn(words_per_block=wb)
+        expand = self._make_expand(si, with_sel=True)
+        same_slots = list(op.same_label_idx_slots)
+
+        def fused(tile, r, start, tables):
+            out, total, rows, bitpos = expand(tile, r, start, tables)
+            tabs = [tables[f"{u}:{w}"] for (_, u, w) in pairs]
+            r2, pop = fused_fn(tabs, tile["idx"], rows, bitpos, slots)
+            cleared = jnp.int32(0)
+            for s in same_slots:
+                r2, c = bitops.clear_bit_rows_count(r2, out["idx"][:, s])
+                cleared = cleared + c
+            return out, total, (r2, pop - cleared)
+
+        return fused
 
     def _make_leaf_terms(self):
         """tile -> (T, n_terms) int32 popcount terms for leaf counting
@@ -498,7 +556,7 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
                  intersect: str = "auto", use_cer_buffer: bool = True,
                  cer_buffer_slots: int = 256, use_failure_cache: bool = True,
                  failure_cache_slots: int = 64, pack_tiles: bool = True,
-                 mesh=None) -> VectorMatchResult:
+                 mesh=None, overlap: bool = True) -> VectorMatchResult:
     """End-to-end vectorized CEMR matching (preprocess + tile enumeration)."""
     cs, an = preprocess(query, data, encoding=encoding, order=order)
     if any(c.shape[0] == 0 for c in cs.cand):
@@ -510,5 +568,5 @@ def vector_match(query: Graph, data: Graph, *, encoding: str = "cost",
                        cer_buffer_slots=cer_buffer_slots,
                        use_failure_cache=use_failure_cache,
                        failure_cache_slots=failure_cache_slots,
-                       pack_tiles=pack_tiles, mesh=mesh)
+                       pack_tiles=pack_tiles, mesh=mesh, overlap=overlap)
     return eng.run(limit=limit, max_steps=max_steps, materialize=materialize)

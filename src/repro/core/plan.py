@@ -30,8 +30,10 @@ IDX, BM = 0, 1
 # Intersect-kernel selection vocabulary, shared by the engine
 # (engine._resolve_intersect_fn) and the options layer
 # (repro.api.MatchOptions). Lives here — not in engine.py — so validating
-# options stays jax-free for ref-engine-only hosts.
-INTERSECT_MODES = ("auto", "jnp", "pallas")
+# options stays jax-free for ref-engine-only hosts. "fused" routes the
+# boundary expand+intersect+popcount through the fused Pallas kernel
+# (engine._make_expand_fused) and leaves the remaining computes on jnp.
+INTERSECT_MODES = ("auto", "jnp", "pallas", "fused")
 
 
 @dataclasses.dataclass

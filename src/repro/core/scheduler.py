@@ -392,6 +392,19 @@ def _fail_plan(segs, n_bounds_before, fail_seg, slots_of):
     return fail_by_seg
 
 
+def _sync_inflight(st, inflight):
+    """Synchronize in-flight superstep dispatches: one `jax.device_get`
+    over every record's `sync` tuple — the only host sync point of the
+    fused loops. A coalesced readback of N overlapped supersteps counts as
+    one `readbacks` and N-1 `overlapped_supersteps`, which is what makes
+    `readbacks <= supersteps` the overlap accounting invariant."""
+    outs = jax.device_get([p["sync"] for p in inflight])
+    for p, o in zip(inflight, outs):
+        p["np"] = o
+    st.readbacks += 1
+    st.overlapped_supersteps += len(inflight) - 1
+
+
 # ---------------------------------------------------------------------------
 # scheduler
 # ---------------------------------------------------------------------------
@@ -513,7 +526,12 @@ class TileScheduler:
                 if eng._stages[sj][0] == "extend":
                     gather_ops += t * max(len(eng._stages[sj][1].bk_pairs), 1)
                 n_computes += 1
-            built.append((eng._make_expand(si), chain, leaf_i))
+            # fused expand+intersect+popcount (one Pallas dispatch for the
+            # boundary expansion and the first extend of the segment) when
+            # the engine runs with intersect="fused" and the pair is
+            # eligible; None composes the plain expand + per-stage computes
+            fused0 = eng._make_expand_fused(si, chain[0][0]) if chain else None
+            built.append((eng._make_expand(si), chain, leaf_i, fused0))
         n_bounds_before = sum(1 for j in range(b) if self._is_boundary(j))
         fail_by_seg = _fail_plan(segs, n_bounds_before, fail_seg,
                                  lambda sj: eng._stages[sj][1].dedup_slots)
@@ -526,16 +544,20 @@ class TileScheduler:
             root_compute_r, root_con = eng._make_compute_parts(0)
 
         def run_compute(si, op, compute_r, con, tile, bufs, fbufs, acc, facc,
-                        tables, masks):
+                        tables, masks, pre=None):
+            # `pre` carries the fused expand+intersect kernel's (r, pop) for
+            # the segment's first extend; it is the same pure function of
+            # the key columns as compute_r, so the CER cache stays sound
+            thunk = ((lambda: pre) if pre is not None
+                     else (lambda: compute_r(tile, tables, masks)))
             if si in bufs:
                 keys = jnp.stack([tile["idx"][:, s] for s in op.dedup_slots],
                                  axis=1)
                 r, pop, bufs[si], s = _cer_compute(
-                    keys, lambda: compute_r(tile, tables, masks), tile,
-                    bufs[si])
+                    keys, thunk, tile, bufs[si])
                 acc = [a + v for a, v in zip(acc, s)]
             else:
-                r, pop = compute_r(tile, tables, masks)
+                r, pop = thunk()
             raw_pop = pop                # true popcount for every alive row
             r, pop, ok = eng.finish_compute(tile, r, pop, con)
             if si in fbufs:
@@ -589,18 +611,25 @@ class TileScheduler:
             proceed = None
             cur_tile, cur_r, cur_cursor = tile, r_in, cursor
             total_in = None
-            for k, (expand, chain, leaf_i) in enumerate(built):
-                cur, tot = expand(cur_tile, cur_r, cur_cursor, tables)
+            for k, (expand, chain, leaf_i, fused0) in enumerate(built):
+                if fused0 is not None:
+                    cur, tot, pre0 = fused0(cur_tile, cur_r, cur_cursor,
+                                            tables)
+                else:
+                    cur, tot = expand(cur_tile, cur_r, cur_cursor, tables)
+                    pre0 = None
                 if k == 0:
                     total_in = tot.astype(jnp.int32)
                 else:
                     cur["alive"] = cur["alive"] & proceed
                 apply_fail_masks(k, cur, fbufs, facc)
                 last = None
-                for (sj, op, compute_r, con) in chain:
+                for ci, (sj, op, compute_r, con) in enumerate(chain):
                     r, pop, ok, acc = run_compute(sj, op, compute_r, con,
                                                   cur, bufs, fbufs, acc,
-                                                  facc, tables, masks)
+                                                  facc, tables, masks,
+                                                  pre=pre0 if ci == 0
+                                                  else None)
                     last = (r, pop, ok)
                     if not leaf_i and sj == chain[-1][0]:
                         break                            # exit compute: no store
@@ -697,15 +726,103 @@ class TileScheduler:
                 st.packed_tiles += 1
                 pending[b] = [mtile, mr, pend[2] + alive_n, pend[3] + total]
             else:
-                stack.append((b, pend[0], pend[1], 0))
+                stack.append((b, pend[0], pend[1], 0, pend[3]))
                 pending[b] = [tile, r, alive_n, total]
         else:
-            stack.append((b, tile, r, 0))
+            stack.append((b, tile, r, 0, total))
+
+    def _dispatch_fused(self, item, stack):
+        """Issue one fused superstep without waiting for its readback. The
+        CER/failure ring buffers fold forward as asynchronous device arrays
+        (no sync needed — only the packed stats parse does), dispatch-side
+        stats are charged immediately, and an item with a known bit total
+        re-enqueues its next expansion chunk right away, so the work-pool
+        refill decision never sits on the readback critical path. Returns
+        the in-flight record for `_sync_inflight`."""
+        eng = self.eng
+        st = self.stats
+        b, tile, r, cursor, tot = item
+        fn, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
+            self._superstep(b)
+        bufs = {si: self._buffers[si] for si in seg_cer}
+        fbufs = {si: self._fail_buffers[si] for si in seg_fail}
+        with enable_x64():                           # leaf reduce is int64
+            (leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2,
+             fbufs2) = fn(tile, r, jnp.int32(cursor), bufs, fbufs,
+                          eng.tables, eng.masks)
+        for si in seg_cer:
+            self._buffers[si] = bufs2[si]
+        for si in seg_fail:
+            self._fail_buffers[si] = fbufs2[si]
+        if self.fail_debug_hook is not None:
+            self.fail_debug_hook(self)
+        st.device_steps += 1
+        st.supersteps += 1
+        st.tiles += 1
+        st.expansions += 1
+        st.rows_processed += self.t * max(n_computes, 1)
+        st.gather_and_ops += gather_ops
+        if tot >= 0 and cursor + self.t < tot:
+            stack.append((b, tile, r, cursor + self.t, tot))
+        return {"item": item, "exit_bounds": exit_bounds,
+                "leaf_tile": leaf_tile, "terms": terms,
+                "frontiers": frontiers, "sync": (packed, cnt, ovf),
+                "np": None}
+
+    def _process_fused(self, p, stack, pending, embeddings, materialize):
+        """Apply one synced readback: fold the packed tail counters, resume
+        the root chunk cursor (the only item whose total is unknown at
+        dispatch), walk the ladder routing the first overflowing frontier,
+        and return the leaf count (exact host fallback on overflow)."""
+        eng = self.eng
+        st = self.stats
+        t = self.t
+        b, tile, r, cursor, tot = p["item"]
+        packed_np, cnt_np, ovf_np = p["np"]
+        exit_bounds = p["exit_bounds"]
+        nb = len(exit_bounds)
+        total_in = int(packed_np[0])
+        leaf_alive = int(packed_np[1])
+        alive_l = [int(v) for v in packed_np[2:2 + nb]]
+        total_l = [int(v) for v in packed_np[2 + nb:2 + 2 * nb]]
+        tail = [int(v) for v in packed_np[2 + 2 * nb:]]
+        st.cer_hits += tail[0]
+        st.cer_misses += tail[1]
+        st.dedup_keys_seen += tail[2]
+        st.dedup_unique += tail[3]
+        st.fail_hits += tail[4]
+        st.fail_misses += tail[5]
+        st.fail_inserts += tail[6]
+        st.fail_pruned_rows += tail[7]
+        if tot < 0 and cursor + t < total_in:
+            stack.append((b, tile, r, cursor + t, total_in))
+        # walk the ladder: consumed boundaries (single-chunk) descend
+        # in-device; the first overflowing frontier resumes on the host
+        for k in range(nb):
+            st.rows_alive += alive_l[k]
+            if alive_l[k] == 0:                      # dead end
+                return 0
+            if total_l[k] <= t:
+                continue                             # consumed in-ladder
+            ft, fr = p["frontiers"][k]
+            self._push_frontier(exit_bounds[k], ft, fr, alive_l[k],
+                                total_l[k], stack, pending)
+            return 0
+        st.leaf_tiles += 1
+        st.rows_alive += leaf_alive
+        if bool(ovf_np):
+            st.leaf_overflows += 1
+            c = leaf_count_host(eng.plan.leaf_singles, eng.plan.leaf_groups,
+                                p["terms"], p["leaf_tile"]["alive"])
+        else:
+            c = int(cnt_np)
+        if materialize and c:
+            embeddings.extend(eng._materialize(p["leaf_tile"]))
+        return c
 
     def _run_fused(self, *, limit, max_steps, materialize):
         eng = self.eng
         st = self.stats = eng.stats = VectorStats()
-        t = self.t
         count = 0
         timed_out = False
         embeddings: list[dict[int, int]] = []
@@ -713,8 +830,10 @@ class TileScheduler:
         root_tile = {"idx": jnp.zeros((1, 0), jnp.int32), "bm": {},
                      "alive": jnp.ones((1,), bool)}
         root_r = jnp.zeros((1, eng.plan.root_words), jnp.uint32)  # recomputed
-        # frontier items: (boundary stage, tile, extension bitmap R, cursor)
-        stack: list = [(0, root_tile, root_r, 0)]
+        # frontier items: (boundary stage, tile, extension bitmap R, cursor,
+        # total set bits of R — or -1 for the root item, whose extension is
+        # only computed in-dispatch)
+        stack: list = [(0, root_tile, root_r, 0, -1)]
         # boundary -> [tile, r, live rows, total bits]: sub-capacity frontiers
         # waiting to be packed with siblings
         pending: dict[int, list] = {}
@@ -722,80 +841,36 @@ class TileScheduler:
         while stack or pending:
             if not stack:
                 b = max(pending)                         # flush deepest first
-                tile_p, r_p, _, _ = pending.pop(b)
-                stack.append((b, tile_p, r_p, 0))
+                tile_p, r_p, _, tot_p = pending.pop(b)
+                stack.append((b, tile_p, r_p, 0, tot_p))
                 continue
             if max_steps is not None and st.device_steps >= max_steps:
                 timed_out = True
                 break
             st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
-            b, tile, r, cursor = stack.pop()
-            fn, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
-                self._superstep(b)
-            bufs = {si: self._buffers[si] for si in seg_cer}
-            fbufs = {si: self._fail_buffers[si] for si in seg_fail}
-            with enable_x64():                           # leaf reduce is int64
-                (leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2,
-                 fbufs2) = fn(tile, r, jnp.int32(cursor), bufs, fbufs,
-                              eng.tables, eng.masks)
-            packed_np, cnt_np, ovf_np = jax.device_get((packed, cnt, ovf))
-            for si in seg_cer:
-                self._buffers[si] = bufs2[si]
-            for si in seg_fail:
-                self._fail_buffers[si] = fbufs2[si]
-            if self.fail_debug_hook is not None:
-                self.fail_debug_hook(self)
-            st.device_steps += 1
-            st.supersteps += 1
-            st.tiles += 1
-            st.expansions += 1
-            st.rows_processed += t * max(n_computes, 1)
-            st.gather_and_ops += gather_ops
-            nb = len(exit_bounds)
-            total_in = int(packed_np[0])
-            leaf_alive = int(packed_np[1])
-            alive_l = [int(v) for v in packed_np[2:2 + nb]]
-            total_l = [int(v) for v in packed_np[2 + nb:2 + 2 * nb]]
-            tail = [int(v) for v in packed_np[2 + 2 * nb:]]
-            st.cer_hits += tail[0]
-            st.cer_misses += tail[1]
-            st.dedup_keys_seen += tail[2]
-            st.dedup_unique += tail[3]
-            st.fail_hits += tail[4]
-            st.fail_misses += tail[5]
-            st.fail_inserts += tail[6]
-            st.fail_pruned_rows += tail[7]
-            if cursor + t < total_in:
-                stack.append((b, tile, r, cursor + t))
-            # walk the ladder: consumed boundaries (single-chunk) descend
-            # in-device; the first overflowing frontier resumes on the host
-            reached_leaf = True
-            for k in range(nb):
-                st.rows_alive += alive_l[k]
-                if alive_l[k] == 0:                      # dead end
-                    reached_leaf = False
+            # Claim and dispatch up to two items per round (double-buffered
+            # frontiers). The claim discipline is identical for overlap
+            # on/off — overlap only defers/coalesces the device_get — so
+            # both settings run the same superstep sequence against the
+            # same buffer states: bit-identical counts and stats by
+            # construction (modulo the readback counters themselves).
+            first = self._dispatch_fused(stack.pop(), stack)
+            if not eng.overlap:
+                _sync_inflight(st, [first])
+            inflight = [first]
+            if stack and (max_steps is None
+                          or st.device_steps < max_steps):
+                second = self._dispatch_fused(stack.pop(), stack)
+                if not eng.overlap:
+                    _sync_inflight(st, [second])
+                inflight.append(second)
+            if eng.overlap:
+                _sync_inflight(st, inflight)
+            for p in inflight:
+                count += self._process_fused(p, stack, pending, embeddings,
+                                             materialize)
+                if count >= limit:
                     break
-                if total_l[k] <= t:
-                    continue                             # consumed in-ladder
-                ft, fr = frontiers[k]
-                self._push_frontier(exit_bounds[k], ft, fr, alive_l[k],
-                                    total_l[k], stack, pending)
-                reached_leaf = False
-                break
-            if not reached_leaf:
-                continue
-            st.leaf_tiles += 1
-            st.rows_alive += leaf_alive
-            if bool(ovf_np):
-                st.leaf_overflows += 1
-                c = leaf_count_host(eng.plan.leaf_singles,
-                                    eng.plan.leaf_groups,
-                                    terms, leaf_tile["alive"])
-            else:
-                c = int(cnt_np)
-            if materialize and c:
-                embeddings.extend(eng._materialize(leaf_tile))
-            count += c
             if count >= limit:
                 break
 
@@ -1417,7 +1492,8 @@ class SuperbatchScheduler:
                  use_dedup: bool = True, use_cer_buffer: bool = True,
                  cer_buffer_slots: int = 256,
                  use_failure_cache: bool = True,
-                 failure_cache_slots: int = 64, pack_tiles: bool = True):
+                 failure_cache_slots: int = 64, pack_tiles: bool = True,
+                 overlap: bool = True):
         from .plan import _pow2ceil, plan_shape_signature
         if not plans:
             raise ValueError("superbatch needs at least one plan")
@@ -1431,6 +1507,7 @@ class SuperbatchScheduler:
         self.nq_pad = _pow2ceil(self.nq)
         self.t = tile_rows
         self.pack_tiles = pack_tiles
+        self.overlap = overlap
         self.program = _get_batch_program(
             self.sig, self.nq_pad, use_cv=use_cv,
             use_cer=(use_dedup and use_cer_buffer),
@@ -1462,10 +1539,10 @@ class SuperbatchScheduler:
                 st.packed_tiles += 1
                 pending[b] = [mtile, mr, pend[2] + alive_n, pend[3] + total]
             else:
-                stack.append((b, pend[0], pend[1], 0))
+                stack.append((b, pend[0], pend[1], 0, pend[3]))
                 pending[b] = [tile, r, alive_n, total]
         else:
-            stack.append((b, tile, r, 0))
+            stack.append((b, tile, r, 0, total))
 
     def run(self, *, limit: int = 1_000_000, max_steps: int | None = None):
         """Drain every query to completion (or `limit` embeddings each /
@@ -1491,20 +1568,14 @@ class SuperbatchScheduler:
                      "bm": {},
                      "alive": jnp.arange(self.nq_pad) < self.nq}
         root_r = jnp.zeros((self.nq_pad, prog.widths[0]), jnp.uint32)
-        stack: list = [(0, root_tile, root_r, 0)]
+        # (boundary, tile, R, cursor, total bits or -1 for the root item)
+        stack: list = [(0, root_tile, root_r, 0, -1)]
         pending: dict[int, list] = {}
 
-        while stack or pending:
-            if not stack:
-                b = max(pending)                     # flush deepest first
-                tile_p, r_p, _, _ = pending.pop(b)
-                stack.append((b, tile_p, r_p, 0))
-                continue
-            if max_steps is not None and st.device_steps >= max_steps:
-                timed_out = True
-                break
-            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
-            b, tile, r, cursor = stack.pop()
+        def dispatch(item):
+            """One batched superstep, no readback wait (see
+            TileScheduler._dispatch_fused for the chaining argument)."""
+            b, tile, r, cursor, tot = item
             fn, exit_bounds, seg_cer, seg_fail, n_computes, gather_ops = \
                 prog.superstep(b)
             bufs = {si: self._buffers[si] for si in seg_cer}
@@ -1513,7 +1584,6 @@ class SuperbatchScheduler:
                 (leaf_tile, terms, cnt_q, ovf_q, packed, frontiers, bufs2,
                  fbufs2) = fn(tile, r, jnp.int32(cursor), bufs, fbufs,
                               self.data, active)
-            packed_np, cnt_np, ovf_np = jax.device_get((packed, cnt_q, ovf_q))
             for si in seg_cer:
                 self._buffers[si] = bufs2[si]
             for si in seg_fail:
@@ -1526,6 +1596,19 @@ class SuperbatchScheduler:
             st.expansions += 1
             st.rows_processed += t * max(n_computes, 1)
             st.gather_and_ops += gather_ops
+            if tot >= 0 and cursor + t < tot:
+                stack.append((b, tile, r, cursor + t, tot))
+            return {"item": item, "exit_bounds": exit_bounds,
+                    "leaf_tile": leaf_tile, "terms": terms,
+                    "frontiers": frontiers, "sync": (packed, cnt_q, ovf_q),
+                    "np": None}
+
+        def process(p):
+            """Apply one synced readback; returns True when the ladder
+            reached the leaf reduction (counts already folded)."""
+            b, tile, r, cursor, tot = p["item"]
+            packed_np, cnt_np, ovf_np = p["np"]
+            exit_bounds = p["exit_bounds"]
             nb = len(exit_bounds)
             total_in = int(packed_np[0])
             leaf_alive = int(packed_np[1])
@@ -1540,46 +1623,73 @@ class SuperbatchScheduler:
             st.fail_misses += tail[5]
             st.fail_inserts += tail[6]
             st.fail_pruned_rows += tail[7]
-            if cursor + t < total_in:
-                stack.append((b, tile, r, cursor + t))
-            reached_leaf = True
+            if tot < 0 and cursor + t < total_in:
+                stack.append((b, tile, r, cursor + t, total_in))
             for k in range(nb):
                 st.rows_alive += alive_l[k]
                 if alive_l[k] == 0:
-                    reached_leaf = False
-                    break
+                    return False
                 if total_l[k] <= t:
                     continue
-                ft, fr = frontiers[k]
+                ft, fr = p["frontiers"][k]
                 self._push_frontier(exit_bounds[k], ft, fr, alive_l[k],
                                     total_l[k], stack, pending)
-                reached_leaf = False
-                break
-            if not reached_leaf:
-                continue
+                return False
             st.leaf_tiles += 1
             st.rows_alive += leaf_alive
             if bool(ovf_np.any()):
                 # exact host fallback, per query (qid selects the rows)
                 st.leaf_overflows += 1
-                terms_np = np.asarray(terms)
-                alive_np = np.asarray(leaf_tile["alive"])
-                qid_np = np.asarray(leaf_tile["qid"])
+                terms_np = np.asarray(p["terms"])
+                alive_arr = np.asarray(p["leaf_tile"]["alive"])
+                qid_np = np.asarray(p["leaf_tile"]["qid"])
                 for qi in range(self.nq):
                     sel = qid_np == qi
                     counts[qi] += leaf_count_host(singles, groups,
                                                   terms_np[sel],
-                                                  alive_np[sel])
+                                                  alive_arr[sel])
             else:
                 for qi in range(self.nq):
                     counts[qi] += int(cnt_np[qi])
-            if all(c >= limit for c in counts):
+            return True
+
+        while stack or pending:
+            if not stack:
+                b = max(pending)                     # flush deepest first
+                tile_p, r_p, _, tot_p = pending.pop(b)
+                stack.append((b, tile_p, r_p, 0, tot_p))
+                continue
+            if max_steps is not None and st.device_steps >= max_steps:
+                timed_out = True
                 break
-            done = [qi for qi in range(self.nq)
-                    if active_np[qi] and counts[qi] >= limit]
-            if done:
-                active_np[done] = False
-                active = jnp.asarray(active_np)
+            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
+            # double-buffered claim of up to two items; the discipline is
+            # shared by overlap on/off (see TileScheduler._run_fused)
+            first = dispatch(stack.pop())
+            if not self.overlap:
+                _sync_inflight(st, [first])
+            inflight = [first]
+            if stack and (max_steps is None
+                          or st.device_steps < max_steps):
+                second = dispatch(stack.pop())
+                if not self.overlap:
+                    _sync_inflight(st, [second])
+                inflight.append(second)
+            if self.overlap:
+                _sync_inflight(st, inflight)
+            stop = False
+            for p in inflight:
+                process(p)
+                if all(c >= limit for c in counts):
+                    stop = True
+                    break
+                done = [qi for qi in range(self.nq)
+                        if active_np[qi] and counts[qi] >= limit]
+                if done:
+                    active_np[done] = False
+                    active = jnp.asarray(active_np)
+            if stop:
+                break
 
         st.bucket_recompiles = prog.compiled_supersteps - compiled_before
         return [min(c, limit) for c in counts], st, timed_out

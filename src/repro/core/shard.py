@@ -61,7 +61,8 @@ from repro.distributed.sharding import partition_bitmap
 
 from .engine import VectorMatchResult, VectorStats
 from .plan import root_extension_weights
-from .scheduler import SuperbatchScheduler, TileScheduler, leaf_count_host
+from .scheduler import (SuperbatchScheduler, TileScheduler, _sync_inflight,
+                        leaf_count_host)
 
 __all__ = ["ShardedTileScheduler", "ShardedSuperbatchScheduler"]
 
@@ -183,9 +184,14 @@ class _ShardLoopBase:
         return entry
 
     def _dispatch(self, b, lanes, aux1, aux2):
-        """Pad `lanes` to the mesh width, run one sharded superstep, fold
-        the CER buffers and dispatch-level stats back in. Returns the
-        host readbacks plus the device-side leaf/frontier outputs."""
+        """Pad `lanes` to the mesh width and run one sharded superstep
+        *without waiting for its readback*. The CER / failure-cache
+        buffers fold forward as asynchronous device values and the
+        dispatch-level stats are charged immediately; the host sync is
+        deferred to `scheduler._sync_inflight`, which fills the returned
+        record's "np" slot from its "sync" tuple. Overlap (dispatching
+        superstep N+1 before reading back N) is therefore purely a matter
+        of *when* the caller syncs — what is computed never changes."""
         S = self.n_shards
         n_real = len(lanes)
         while len(lanes) < S:
@@ -201,8 +207,6 @@ class _ShardLoopBase:
         with enable_x64():                           # leaf reduce is int64
             (leaf_tile, terms, cnt, ovf, packed, frontiers, bufs2, fbufs2,
              total) = fn(tiles, rs, cursors, bufs, fbufs, parts, aux1, aux2)
-        packed_np, cnt_np, ovf_np, total_np = jax.device_get(
-            (packed, cnt, ovf, total))
         for si in seg_cer:
             self._buffers[si] = bufs2[si]
         for si in seg_fail:
@@ -217,8 +221,10 @@ class _ShardLoopBase:
         st.shard_lanes += n_real
         st.rows_processed += n_real * self.t * max(n_computes, 1)
         st.gather_and_ops += n_real * gather_ops
-        return (n_real, exit_bounds, leaf_tile, terms, packed_np, cnt_np,
-                ovf_np, total_np, frontiers)
+        return {"n_real": n_real, "exit_bounds": exit_bounds,
+                "leaf_tile": leaf_tile, "terms": terms,
+                "frontiers": frontiers,
+                "sync": (packed, cnt, ovf, total), "np": None}
 
     def _walk_lane(self, s, row, exit_bounds, frontiers, stack, pending):
         """Apply lane `s`'s packed readback: CER/boundary stats, then
@@ -331,26 +337,15 @@ class ShardedTileScheduler(_ShardLoopBase, TileScheduler):
             for s in range(S) if self._part_counts[s] > 0]
         pending: dict[int, list] = {}
 
-        while stack or pending:
-            if not stack:
-                b = max(pending)                     # flush deepest first
-                tile_p, r_p, _, tot_p = pending.pop(b)
-                stack.append(self._item(b, tile_p, r_p, 0, tot_p))
-                continue
-            if max_steps is not None and st.device_steps >= max_steps:
-                timed_out = True
-                break
-            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
-            b = stack[-1][0]
-            lanes = self._fill_lanes(b, stack, pending)
-            (n_real, exit_bounds, leaf_tile, terms, packed_np, cnt_np,
-             ovf_np, total_np, frontiers) = self._dispatch(
-                b, lanes, self._tables, self._masks)
+        def consume(rec):
+            """Fold one synced superstep record into the count."""
+            packed_np, cnt_np, ovf_np, total_np = rec["np"]
+            leaf_tile, terms = rec["leaf_tile"], rec["terms"]
             any_ovf = bool(np.asarray(ovf_np).any())
             lane_sum = 0
-            for s in range(n_real):
-                if not self._walk_lane(s, packed_np[s], exit_bounds,
-                                       frontiers, stack, pending):
+            for s in range(rec["n_real"]):
+                if not self._walk_lane(s, packed_np[s], rec["exit_bounds"],
+                                       rec["frontiers"], stack, pending):
                     continue
                 if bool(ovf_np[s]):
                     st.leaf_overflows += 1
@@ -366,7 +361,43 @@ class ShardedTileScheduler(_ShardLoopBase, TileScheduler):
                 lane_sum += c
             # psum total is the primary count; the per-lane walk replaces
             # it only when a shard tripped the exact host fallback
-            count += lane_sum if any_ovf else int(total_np)
+            return lane_sum if any_ovf else int(total_np)
+
+        overlap = eng.overlap
+        while stack or pending:
+            if not stack:
+                b = max(pending)                     # flush deepest first
+                tile_p, r_p, _, tot_p = pending.pop(b)
+                stack.append(self._item(b, tile_p, r_p, 0, tot_p))
+                continue
+            if max_steps is not None and st.device_steps >= max_steps:
+                timed_out = True
+                break
+            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
+            # double-buffered claim of up to two supersteps; claim and
+            # dispatch order is identical for overlap on/off — only the
+            # readback timing differs (see scheduler._sync_inflight)
+            b = stack[-1][0]
+            first = self._dispatch(b, self._fill_lanes(b, stack, pending),
+                                   self._tables, self._masks)
+            if not overlap:
+                _sync_inflight(st, [first])
+            inflight = [first]
+            if stack and (max_steps is None
+                          or st.device_steps < max_steps):
+                b2 = stack[-1][0]
+                second = self._dispatch(
+                    b2, self._fill_lanes(b2, stack, pending),
+                    self._tables, self._masks)
+                if not overlap:
+                    _sync_inflight(st, [second])
+                inflight.append(second)
+            if overlap:
+                _sync_inflight(st, inflight)
+            for rec in inflight:
+                count += consume(rec)
+                if count >= limit:
+                    break
             if count >= limit:
                 break
 
@@ -465,26 +496,15 @@ class ShardedSuperbatchScheduler(_ShardLoopBase, SuperbatchScheduler):
             for s in range(S) if self._part_counts[s] > 0]
         pending: dict[int, list] = {}
 
-        while stack or pending:
-            if not stack:
-                b = max(pending)
-                tile_p, r_p, _, tot_p = pending.pop(b)
-                stack.append(self._item(b, tile_p, r_p, 0, tot_p))
-                continue
-            if max_steps is not None and st.device_steps >= max_steps:
-                timed_out = True
-                break
-            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
-            b = stack[-1][0]
-            lanes = self._fill_lanes(b, stack, pending)
-            (n_real, exit_bounds, leaf_tile, terms, packed_np, cnt_np,
-             ovf_np, total_np, frontiers) = self._dispatch(
-                b, lanes, self.data, active)
+        def consume(rec):
+            """Fold one synced superstep record into the per-query counts."""
+            packed_np, cnt_np, ovf_np, total_np = rec["np"]
+            leaf_tile, terms = rec["leaf_tile"], rec["terms"]
             any_ovf = bool(np.asarray(ovf_np).any())
             lane_sums = [0] * self.nq
-            for s in range(n_real):
-                if not self._walk_lane(s, packed_np[s], exit_bounds,
-                                       frontiers, stack, pending):
+            for s in range(rec["n_real"]):
+                if not self._walk_lane(s, packed_np[s], rec["exit_bounds"],
+                                       rec["frontiers"], stack, pending):
                     continue
                 if bool(np.asarray(ovf_np[s]).any()):
                     # exact host fallback for this shard's tile, per query
@@ -504,13 +524,50 @@ class ShardedSuperbatchScheduler(_ShardLoopBase, SuperbatchScheduler):
                 # only when a shard tripped the exact host fallback
                 counts[qi] += (lane_sums[qi] if any_ovf
                                else int(total_np[qi]))
-            if all(c >= limit for c in counts):
+
+        overlap = self.overlap
+        while stack or pending:
+            if not stack:
+                b = max(pending)
+                tile_p, r_p, _, tot_p = pending.pop(b)
+                stack.append(self._item(b, tile_p, r_p, 0, tot_p))
+                continue
+            if max_steps is not None and st.device_steps >= max_steps:
+                timed_out = True
                 break
-            done = [qi for qi in range(self.nq)
-                    if active_np[qi] and counts[qi] >= limit]
-            if done:
-                active_np[done] = False
-                active = jnp.asarray(active_np)
+            st.peak_stack = max(st.peak_stack, len(stack) + len(pending))
+            # double-buffered claim of up to two supersteps (same claim
+            # discipline for overlap on/off — only readback timing differs)
+            b = stack[-1][0]
+            first = self._dispatch(b, self._fill_lanes(b, stack, pending),
+                                   self.data, active)
+            if not overlap:
+                _sync_inflight(st, [first])
+            inflight = [first]
+            if stack and (max_steps is None
+                          or st.device_steps < max_steps):
+                b2 = stack[-1][0]
+                second = self._dispatch(
+                    b2, self._fill_lanes(b2, stack, pending),
+                    self.data, active)
+                if not overlap:
+                    _sync_inflight(st, [second])
+                inflight.append(second)
+            if overlap:
+                _sync_inflight(st, inflight)
+            stop = False
+            for rec in inflight:
+                consume(rec)
+                if all(c >= limit for c in counts):
+                    stop = True
+                    break
+                done = [qi for qi in range(self.nq)
+                        if active_np[qi] and counts[qi] >= limit]
+                if done:
+                    active_np[done] = False
+                    active = jnp.asarray(active_np)
+            if stop:
+                break
 
         st.bucket_recompiles = prog.compiled_supersteps - compiled_before
         return [min(c, limit) for c in counts], st, timed_out

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bitmap_intersect_pallas"]
+__all__ = ["bitmap_intersect_pallas", "fused_expand_intersect_pallas",
+           "autotune_words_per_block", "FUSED_TILE_WIDTHS"]
 
 
 def _kernel(k: int, n_wb: int, idx_ref, *refs):
@@ -90,3 +91,150 @@ def bitmap_intersect_pallas(tables: tuple, idxs: jnp.ndarray, *,
                    jax.ShapeDtypeStruct((t_rows, 1), jnp.int32)),
         interpret=interpret)(idxs, *tables)
     return r[:, :w], pop
+
+
+def _fused_kernel(k: int, rows_ref, bitpos_ref, idx_ref, *refs):
+    # identical compute body to _kernel — the fusion lives entirely in the
+    # in_specs index_maps (double indirection through rows/bitpos/idx)
+    table_blocks = refs[:k]
+    r_ref, pop_ref = refs[k], refs[k + 1]
+    r = table_blocks[0][...]
+    for j in range(1, k):
+        r = r & table_blocks[j][...]
+    r_ref[...] = r
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        pop_ref[...] = jnp.zeros_like(pop_ref)
+
+    pop_ref[...] += jax.lax.population_count(r).astype(jnp.int32).sum(
+        axis=1, keepdims=True, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("slots", "words_per_block", "interpret"))
+def fused_expand_intersect_pallas(tables: tuple, idx: jnp.ndarray,
+                                  rows: jnp.ndarray, bitpos: jnp.ndarray, *,
+                                  slots: tuple,
+                                  words_per_block: int = 32,
+                                  interpret: bool = True):
+    """Fused frontier expansion + k-way bitmap AND + popcount.
+
+    Consumes the bit selection from `core.bitops.expand_select` directly:
+    instead of first materializing the child tile's gathered index columns
+    (``concat(idx[rows], bitpos)``) and then gathering table rows through
+    them, each table's BlockSpec index_map double-indirects through the
+    scalar-prefetched (rows, bitpos, idx) triple — slot ``s < K0`` reads
+    parent column ``idx[rows[t], s]``, slot ``s == K0`` reads the freshly
+    selected bit position ``bitpos[t]``. The AND and per-row popcount then
+    run per word-block exactly like `bitmap_intersect_pallas`.
+
+    tables: k × (S_j, W) uint32 adjacency bitmaps
+    idx:    (Tin, K0) int32 parent tile index columns (K0 may be 0)
+    rows:   (T,) int32 source row of each selected bit
+    bitpos: (T,) int32 bit position (candidate index) of each selected bit
+    slots:  k static ints in [0, K0], one per table
+    Returns (R (T, W) uint32, pop (T, 1) int32). Invalid / dead rows are
+    NOT masked here: (R, pop) must stay a pure function of the key columns
+    so CER cache entries built from it remain sound (clamped selections
+    are valid keys); the engine's finish_compute masks downstream.
+    """
+    k = len(tables)
+    assert len(slots) == k
+    t_rows = rows.shape[0]
+    w = tables[0].shape[1]
+    assert all(tbl.shape[1] == w for tbl in tables)
+    k0 = idx.shape[1]
+    if k0 == 0:                     # keep the prefetch ref 2-D and non-empty;
+        idx = jnp.zeros((idx.shape[0], 1), jnp.int32)  # never dereferenced
+    wb = min(words_per_block, w)
+    w_pad = ((w + wb - 1) // wb) * wb
+    if w_pad != w:                  # zero pad words AND/popcount to nothing
+        tables = tuple(jnp.pad(tbl, ((0, 0), (0, w_pad - tbl.shape[1])))
+                       for tbl in tables)
+
+    grid = (t_rows, w_pad // wb)
+
+    def _map_parent(s, t, wi, rows_ref, bitpos_ref, idx_ref):
+        return idx_ref[rows_ref[t], s], wi
+
+    def _map_bitpos(t, wi, rows_ref, bitpos_ref, idx_ref):
+        return bitpos_ref[t], wi
+
+    in_specs = [
+        pl.BlockSpec((1, wb), (_map_bitpos if s == k0
+                               else functools.partial(_map_parent, s)))
+        for s in slots
+    ]
+    out_specs = [
+        pl.BlockSpec((1, wb),
+                     lambda t, wi, rows_ref, bitpos_ref, idx_ref: (t, wi)),
+        pl.BlockSpec((1, 1),
+                     lambda t, wi, rows_ref, bitpos_ref, idx_ref: (t, 0)),
+    ]
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3, grid=grid, in_specs=in_specs,
+        out_specs=out_specs)
+    r, pop = pl.pallas_call(
+        functools.partial(_fused_kernel, k), grid_spec=gs,
+        out_shape=(jax.ShapeDtypeStruct((t_rows, w_pad), jnp.uint32),
+                   jax.ShapeDtypeStruct((t_rows, 1), jnp.int32)),
+        interpret=interpret)(rows, bitpos, idx, *tables)
+    return r[:, :w], pop
+
+
+# ------------------------------------------------------------------ autotune
+# The word-block width only changes how the fused kernel tiles HBM reads —
+# every width is bit-identical by construction (zero padding ANDs/popcounts
+# to nothing; tests/test_kernels.py sweeps the widths against the oracle), so
+# autotuning can never change *what* is computed, only how fast.
+FUSED_TILE_WIDTHS = (8, 16, 32)
+
+_AUTOTUNE_CACHE: dict = {}
+
+
+def autotune_words_per_block(k: int, w: int, *, interpret: bool = True,
+                             widths: tuple = FUSED_TILE_WIDTHS) -> int:
+    """Pick the fused kernel's word-block width for a (k tables, W words)
+    shape by timing a synthetic sweep on the current backend, cached per
+    (backend, k, W, interpret).
+
+    The winner's wall time is sanity-checked against the roofline HBM
+    lower bound (`launch.roofline.HW`): a measurement faster than
+    ``k·T·W·4B / hbm_bw`` is physically impossible on TPU and means the
+    timer glitched, in which case the largest (most conservative) width
+    is returned instead of trusting the sweep.
+    """
+    import time
+
+    import jax as _jax
+
+    key = (_jax.default_backend(), k, w, bool(interpret))
+    if key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[key]
+    t_rows, s_rows = 64, 128
+    tabs = tuple(jnp.full((s_rows, w), jnp.uint32(0x5A5A5A5A + j))
+                 for j in range(k))
+    idx = (jnp.arange(t_rows, dtype=jnp.int32) % s_rows)[:, None]
+    rows = jnp.arange(t_rows, dtype=jnp.int32) % t_rows
+    bitpos = (jnp.arange(t_rows, dtype=jnp.int32) * 7) % s_rows
+    slots = (1,) + (0,) * (k - 1)          # exercise both indirections
+    best, best_t = None, None
+    for wb in widths:
+        fn = lambda: fused_expand_intersect_pallas(    # noqa: E731
+            tabs, idx, rows, bitpos, slots=slots, words_per_block=wb,
+            interpret=interpret)
+        _jax.block_until_ready(fn())       # compile outside the timing
+        t0 = time.perf_counter()
+        for _ in range(3):
+            _jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) / 3
+        if best_t is None or dt < best_t:
+            best, best_t = wb, dt
+    from repro.launch.roofline import HW
+    floor = k * t_rows * w * 4 / HW["hbm_bw"]
+    if not interpret and best_t is not None and best_t < floor:
+        best = max(widths)                 # timer glitch: don't trust sweep
+    _AUTOTUNE_CACHE[key] = best
+    return best

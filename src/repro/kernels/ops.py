@@ -13,11 +13,15 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .bitmap_intersect import bitmap_intersect_pallas
+from .bitmap_intersect import (autotune_words_per_block,
+                               bitmap_intersect_pallas,
+                               fused_expand_intersect_pallas)
 from .flash_decode import flash_decode_pallas
 
-__all__ = ["bitmap_intersect", "flash_decode", "make_intersect_fn",
-           "decode_attention", "default_interpret", "on_tpu"]
+__all__ = ["bitmap_intersect", "flash_decode", "fused_expand_intersect",
+           "make_intersect_fn", "make_fused_expand_intersect_fn",
+           "autotune_words_per_block", "decode_attention",
+           "default_interpret", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -52,6 +56,46 @@ def flash_decode(q, k, v, lengths=None, *, use_pallas: bool = False,
         return flash_decode_pallas(q, k, v, lengths, block_s=block_s,
                                    interpret=interpret)
     return ref.flash_decode_ref(q, k, v, lengths)
+
+
+def fused_expand_intersect(tables, idx, rows, bitpos, *, slots,
+                           use_pallas: bool = True,
+                           interpret: bool | None = None,
+                           words_per_block: int | None = None):
+    """Fused frontier expansion + intersection + popcount (or its two-step
+    jnp oracle). `words_per_block=None` autotunes per backend/shape."""
+    tables = tuple(tables)
+    slots = tuple(slots)
+    if not use_pallas:
+        return ref.fused_expand_intersect_ref(tables, idx, rows, bitpos,
+                                              slots=slots)
+    if interpret is None:
+        interpret = default_interpret()
+    if words_per_block is None:
+        words_per_block = autotune_words_per_block(
+            len(tables), tables[0].shape[1], interpret=interpret)
+    return fused_expand_intersect_pallas(tables, idx, rows, bitpos,
+                                         slots=slots,
+                                         words_per_block=words_per_block,
+                                         interpret=interpret)
+
+
+def make_fused_expand_intersect_fn(*, use_pallas: bool = True,
+                                   interpret: bool | None = None,
+                                   words_per_block: int | None = None):
+    """Adapter for core.engine._make_expand_fused: takes the backward-pair
+    tables, parent index columns, the (rows, bitpos) bit selection and the
+    static slot map; returns ``(R, pop)`` with pop flattened to (T,)."""
+
+    def fn(tables, idx, rows, bitpos, slots):
+        r, pop = fused_expand_intersect(tables, idx, rows, bitpos,
+                                        slots=tuple(slots),
+                                        use_pallas=use_pallas,
+                                        interpret=interpret,
+                                        words_per_block=words_per_block)
+        return r, pop.reshape(-1)
+
+    return fn
 
 
 def make_intersect_fn(*, use_pallas: bool = True, interpret: bool | None = None):

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bitmap_intersect_ref", "flash_decode_ref", "leaf_count_ref"]
+__all__ = ["bitmap_intersect_ref", "fused_expand_intersect_ref",
+           "flash_decode_ref", "leaf_count_ref"]
 
 
 def bitmap_intersect_ref(tables, idxs):
@@ -16,6 +17,16 @@ def bitmap_intersect_ref(tables, idxs):
     pop = jax.lax.population_count(r).astype(jnp.int32).sum(axis=1,
                                                             keepdims=True)
     return r, pop
+
+
+def fused_expand_intersect_ref(tables, idx, rows, bitpos, *, slots):
+    """Two-step oracle for the fused expand+intersect kernel: materialize
+    the child index columns (parent columns gathered through `rows`, plus
+    `bitpos` as the trailing slot), then AND the per-slot table rows and
+    popcount — exactly `bitmap_intersect_ref` over the gathered columns."""
+    cols = jnp.concatenate([idx[rows], bitpos[:, None]], axis=1)
+    idxs = jnp.stack([cols[:, s] for s in slots], axis=1)
+    return bitmap_intersect_ref(tables, idxs)
 
 
 def flash_decode_ref(q, k, v, lengths=None, scale=None):

@@ -24,6 +24,10 @@ Hypothesis (available when `HAS_HYPOTHESIS`):
   failure_cache_regime() — (seed, qsize, slots, tile_rows, use_cer_buffer,
                          use_dedup) regimes for the negative-cache on/off
                          differential
+  overlap_regime()     — (seed, directed, n_edge_labels, qsize, tile_rows,
+                         intersect, use_cer_buffer, use_failure_cache)
+                         regimes for the overlap on/off bit-identity
+                         differential
 """
 from __future__ import annotations
 
@@ -43,7 +47,7 @@ except ImportError:                                        # pragma: no cover
 __all__ = ["fig1_pair", "random_pair", "brother_workload", "batch_workload",
            "delta_workload", "HAS_HYPOTHESIS", "small_graph_pair",
            "graph_regime", "workload_regime", "delta_regime",
-           "failure_cache_regime"]
+           "failure_cache_regime", "overlap_regime"]
 
 
 # ------------------------------------------------------------- deterministic
@@ -231,9 +235,28 @@ if HAS_HYPOTHESIS:
         use_cer_buffer = draw(st.booleans())
         use_dedup = draw(st.booleans())
         return seed, qsize, slots, tile_rows, use_cer_buffer, use_dedup
+
+    @st.composite
+    def overlap_regime(draw):
+        """Knobs for one overlap on/off bit-identity differential run:
+        random (possibly directed / edge-labeled) pairs, small tiles so
+        multiple supersteps (and hence real overlap partners) occur, the
+        fused kernel path, and the CER / failure-cache machinery whose
+        dispatch-time fold-back the overlap refactor must not perturb."""
+        seed = draw(st.integers(0, 2**15 - 1))
+        directed = draw(st.booleans())
+        n_el = draw(st.sampled_from([None, 2]))
+        qsize = draw(st.integers(3, 6))
+        tile_rows = draw(st.sampled_from([8, 16, 64]))
+        intersect = draw(st.sampled_from(["auto", "fused"]))
+        use_cer_buffer = draw(st.booleans())
+        use_failure_cache = draw(st.booleans())
+        return (seed, directed, n_el, qsize, tile_rows, intersect,
+                use_cer_buffer, use_failure_cache)
 else:                                                      # pragma: no cover
     def _needs_hypothesis(*_a, **_kw):
         raise RuntimeError("hypothesis is not installed")
 
     small_graph_pair = graph_regime = workload_regime = _needs_hypothesis
     delta_regime = failure_cache_regime = _needs_hypothesis
+    overlap_regime = _needs_hypothesis

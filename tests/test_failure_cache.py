@@ -192,7 +192,7 @@ def test_superbatch_parity_and_activity():
 def test_sharded_parity():
     query, data = random_pair(7, qsize=6)
     m = Matcher(Dataset.from_graph(data))
-    base = dict(engine="vector", limit=10**9, mesh="auto")
+    base = dict(engine="vector", limit=10**9, mesh=4)
     on = m.count(query, MatchOptions(use_failure_cache=True, **base))
     on2 = m.count(query, MatchOptions(use_failure_cache=True, **base))
     off = m.count(query, MatchOptions(use_failure_cache=False, **base))
@@ -207,7 +207,7 @@ def test_sharded_superbatch_parity():
     m = Matcher(Dataset.from_graph(data))
     outs = {}
     for fc in (True, False):
-        opts = MatchOptions(engine="vector", limit=10**9, mesh="auto",
+        opts = MatchOptions(engine="vector", limit=10**9, mesh=4,
                             use_failure_cache=fc)
         outs[fc] = m.match_many(queries, opts, batch="auto")
     assert _counts(outs[True]) == _counts(outs[False])

@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.bitmap_intersect import bitmap_intersect_pallas
+from repro.kernels.bitmap_intersect import (bitmap_intersect_pallas,
+                                            fused_expand_intersect_pallas)
 from repro.kernels.flash_decode import flash_decode_pallas
 
 
@@ -36,6 +37,151 @@ def test_bitmap_intersect_word_blocking(wpb):
     r, pop = bitmap_intersect_pallas(tables, idxs, words_per_block=wpb)
     np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
     np.testing.assert_array_equal(np.asarray(pop), np.asarray(pop_ref))
+
+
+# ----------------------------------------------- fused expand + intersect
+def _fused_case(k, t_rows, t_in, w, seed, *, fill=None):
+    """Synthetic (tables, idx, rows, bitpos, slots) for the fused kernel:
+    k0 = k-1 parent columns plus the bitpos slot, mixed slot map."""
+    rng = np.random.default_rng(seed)
+    k0 = max(k - 1, 1)
+    s_max = 33                                    # rows per table
+    if fill is None:
+        tables = tuple(
+            jnp.asarray(rng.integers(0, 2**32, size=(s_max, w),
+                                     dtype=np.uint32))
+            for _ in range(k))
+    else:                                         # all-zero / all-one edges
+        tables = tuple(jnp.full((s_max, w), np.uint32(fill))
+                       for _ in range(k))
+    idx = jnp.asarray(rng.integers(0, s_max, size=(t_in, k0))
+                      .astype(np.int32))
+    rows = jnp.asarray(rng.integers(0, t_in, size=t_rows).astype(np.int32))
+    bitpos = jnp.asarray(rng.integers(0, s_max, size=t_rows)
+                         .astype(np.int32))
+    slots = tuple(rng.permutation(k0 + 1)[:k].astype(int).tolist())
+    return tables, idx, rows, bitpos, slots
+
+
+@pytest.mark.parametrize("wpb", [8, 16, 32])
+@pytest.mark.parametrize("k", [1, 2, 3])
+@pytest.mark.parametrize("t_rows,w", [(1, 1), (16, 5), (33, 40)])
+def test_fused_expand_intersect_width_sweep(k, t_rows, w, wpb):
+    """Fused expand+intersect+popcount vs the two-step oracle across the
+    autotunable tile widths {8, 16, 32} and word counts — autotune can
+    never pick a width that diverges."""
+    tables, idx, rows, bitpos, slots = _fused_case(k, t_rows, 24, w,
+                                                   seed=k * 77 + t_rows + w)
+    r_ref, pop_ref = ref.fused_expand_intersect_ref(tables, idx, rows,
+                                                    bitpos, slots=slots)
+    r_pal, pop_pal = fused_expand_intersect_pallas(
+        tables, idx, rows, bitpos, slots=slots, words_per_block=wpb)
+    np.testing.assert_array_equal(np.asarray(r_pal), np.asarray(r_ref))
+    np.testing.assert_array_equal(np.asarray(pop_pal), np.asarray(pop_ref))
+
+
+@pytest.mark.parametrize("fill", [0x00000000, 0xFFFFFFFF])
+def test_fused_expand_intersect_bitmap_edges(fill):
+    """All-zero and all-one bitmaps: popcount must be exactly 0 / 32·W on
+    every row regardless of the selection pattern."""
+    tables, idx, rows, bitpos, slots = _fused_case(2, 16, 8, 7, seed=5,
+                                                   fill=fill)
+    r, pop = fused_expand_intersect_pallas(tables, idx, rows, bitpos,
+                                           slots=slots, words_per_block=8)
+    want = 0 if fill == 0 else 32 * 7
+    np.testing.assert_array_equal(np.asarray(pop).ravel(),
+                                  np.full(16, want))
+    r_ref, _ = ref.fused_expand_intersect_ref(tables, idx, rows, bitpos,
+                                              slots=slots)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+
+
+def test_fused_expand_intersect_no_parent_columns():
+    """K0 = 0 (parent tile has no index columns): every slot must be the
+    bitpos slot and the dummy idx pad is never dereferenced."""
+    rng = np.random.default_rng(9)
+    tables = (jnp.asarray(rng.integers(0, 2**32, size=(20, 3),
+                                       dtype=np.uint32)),)
+    idx = jnp.zeros((6, 0), jnp.int32)
+    rows = jnp.asarray(rng.integers(0, 6, size=10).astype(np.int32))
+    bitpos = jnp.asarray(rng.integers(0, 20, size=10).astype(np.int32))
+    r_ref, pop_ref = ref.fused_expand_intersect_ref(tables, idx, rows,
+                                                    bitpos, slots=(0,))
+    r, pop = fused_expand_intersect_pallas(tables, idx, rows, bitpos,
+                                           slots=(0,), words_per_block=16)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+    np.testing.assert_array_equal(np.asarray(pop), np.asarray(pop_ref))
+
+
+@pytest.mark.skipif(not ops.on_tpu(), reason="compiled Pallas needs a TPU")
+@pytest.mark.parametrize("wpb", [8, 16, 32])
+def test_fused_expand_intersect_compiled_matches_interpret(wpb):
+    """On TPU the compiled kernel must agree with interpret mode (which the
+    CPU sweeps above pin to the oracle)."""
+    tables, idx, rows, bitpos, slots = _fused_case(2, 32, 16, 24, seed=3)
+    r_i, p_i = fused_expand_intersect_pallas(
+        tables, idx, rows, bitpos, slots=slots, words_per_block=wpb,
+        interpret=True)
+    r_c, p_c = fused_expand_intersect_pallas(
+        tables, idx, rows, bitpos, slots=slots, words_per_block=wpb,
+        interpret=False)
+    np.testing.assert_array_equal(np.asarray(r_c), np.asarray(r_i))
+    np.testing.assert_array_equal(np.asarray(p_c), np.asarray(p_i))
+
+
+def test_fused_ops_dispatch_and_two_step_reference():
+    """ops.fused_expand_intersect(use_pallas=False) is the two-step
+    make_intersect_fn reference over the materialized child columns —
+    the kernel must match it bit-for-bit."""
+    tables, idx, rows, bitpos, slots = _fused_case(3, 16, 8, 9, seed=11)
+    # two-step reference: materialize child columns, then the existing
+    # intersect path (jnp oracle of make_intersect_fn)
+    cols = jnp.concatenate([idx[rows], bitpos[:, None]], axis=1)
+    idxs = jnp.stack([cols[:, s] for s in slots], axis=1)
+    two_step = ops.make_intersect_fn(use_pallas=False)
+    r_ref, pop_ref = two_step(tables, idxs)
+    for kw in (dict(use_pallas=False), dict(use_pallas=True, interpret=True),
+               dict(use_pallas=True, interpret=True, words_per_block=16)):
+        r, pop = ops.fused_expand_intersect(tables, idx, rows, bitpos,
+                                            slots=slots, **kw)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+        np.testing.assert_array_equal(np.asarray(pop).ravel(),
+                                      np.asarray(pop_ref).ravel())
+
+
+def test_autotune_words_per_block():
+    """Autotune returns one of the swept widths, caches per shape, and the
+    chosen width agrees with every other width bit-for-bit (so the choice
+    is a pure perf decision)."""
+    from repro.kernels.bitmap_intersect import (FUSED_TILE_WIDTHS,
+                                                autotune_words_per_block)
+    wb = autotune_words_per_block(2, 24, interpret=True)
+    assert wb in FUSED_TILE_WIDTHS
+    assert autotune_words_per_block(2, 24, interpret=True) == wb  # cached
+    tables, idx, rows, bitpos, slots = _fused_case(2, 16, 8, 24, seed=21)
+    outs = [fused_expand_intersect_pallas(tables, idx, rows, bitpos,
+                                          slots=slots, words_per_block=w)
+            for w in FUSED_TILE_WIDTHS]
+    for r, pop in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(outs[0][0]))
+        np.testing.assert_array_equal(np.asarray(pop),
+                                      np.asarray(outs[0][1]))
+
+
+def test_engine_with_fused_intersect_matches_oracle():
+    """End-to-end: intersect="fused" routes the boundary expansion through
+    the fused kernel with counts identical to the jnp engine and the
+    oracle."""
+    from repro.core import random_walk_query, synthetic_labeled_graph
+    from repro.core.engine import vector_match
+    from repro.core.oracle import nx_count
+
+    data = synthetic_labeled_graph(60, 5.0, 3, seed=2, power_law=False)
+    query = random_walk_query(data, 5, seed=12)
+    expect = nx_count(query, data)
+    res = vector_match(query, data, limit=10**9, tile_rows=64,
+                       intersect="fused")
+    assert res.count == expect
 
 
 def test_engine_with_pallas_intersect_matches_oracle():

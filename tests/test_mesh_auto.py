@@ -1,0 +1,148 @@
+"""mesh="auto" cost model: small queries must never pay the shard tax.
+
+Unit tests pin `auto_mesh_devices` (pure function of workload size and
+host shape) and the integration tests pin `Matcher._resolve_mesh` — with
+the BENCH_shard regression encoded: dblp-sized work on a 2-core CPU
+container forced to 4 XLA host devices must NOT pick a 4-lane mesh,
+because 4 lanes oversubscribe 2 cores and the sharded run loses to the
+sequential one on wall-clock.
+
+Run standalone (or via scripts/ci.sh) the module forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before jax loads
+so the oversubscription gate is actually exercised against a multi-device
+platform."""
+import os
+import sys
+
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4"
+                               ).strip()
+
+import jax
+import pytest
+from strategies import fig1_pair
+
+from repro.api import Dataset, Matcher, MatchOptions
+from repro.api.options import SHARD_AUTO_MIN_ROWS, auto_mesh_devices
+
+MULTI = len(jax.devices()) > 1
+needs_devices = pytest.mark.skipif(
+    not MULTI, reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                      "device_count=4 (run this file standalone)")
+
+BIG = 10 * SHARD_AUTO_MIN_ROWS
+
+
+# ------------------------------------------------------------- unit: gates
+
+def test_single_device_never_shards():
+    assert auto_mesh_devices(BIG, n_devices=1, cpu_count=64,
+                             platform="cpu") == 0
+    assert auto_mesh_devices(BIG, n_devices=0, cpu_count=64,
+                             platform="tpu") == 0
+
+
+def test_cpu_oversubscription_never_shards():
+    """The BENCH_shard dblp regression: 4 forced host devices on a 2-core
+    CPU box time-slice the same cores, so sharding only adds dispatch
+    overhead — the cost model must refuse regardless of workload size."""
+    assert auto_mesh_devices(BIG, n_devices=4, cpu_count=2,
+                             platform="cpu") == 0
+    assert auto_mesh_devices(None, n_devices=4, cpu_count=4,
+                             platform="cpu") == 0
+    # enough real cores to back every lane -> sharding is allowed
+    assert auto_mesh_devices(BIG, n_devices=4, cpu_count=16,
+                             platform="cpu") == 4
+
+
+def test_small_workloads_never_shard():
+    """Below the row floor the per-superstep lane padding + collective
+    overhead dominates; small queries stay on the single-device path."""
+    assert auto_mesh_devices(SHARD_AUTO_MIN_ROWS - 1, n_devices=4,
+                             cpu_count=16, platform="cpu") == 0
+    assert auto_mesh_devices(0, n_devices=8, cpu_count=64,
+                             platform="tpu") == 0
+    assert auto_mesh_devices(12, n_devices=4, cpu_count=16,
+                             platform="tpu") == 0
+
+
+def test_large_workloads_shard_on_real_accelerators():
+    assert auto_mesh_devices(SHARD_AUTO_MIN_ROWS, n_devices=4,
+                             cpu_count=16, platform="cpu") == 4
+    assert auto_mesh_devices(BIG, n_devices=8, cpu_count=2,
+                             platform="tpu") == 8
+    # unknown size = assume large (back-compat with callers that cannot
+    # cheaply estimate the candidate-row total)
+    assert auto_mesh_devices(None, n_devices=8, cpu_count=2,
+                             platform="tpu") == 8
+
+
+def test_min_rows_override():
+    assert auto_mesh_devices(100, n_devices=4, cpu_count=16,
+                             platform="cpu", min_rows=10) == 4
+    assert auto_mesh_devices(100, n_devices=4, cpu_count=16,
+                             platform="cpu", min_rows=101) == 0
+
+
+# ------------------------------------------- integration: Matcher._resolve
+
+def test_resolve_mesh_none_and_explicit():
+    data, query = fig1_pair()
+    m = Matcher(Dataset.from_graph(data))
+    assert m._resolve_mesh(MatchOptions(engine="vector")) is None
+    # explicit ints bypass the cost model entirely (clamped to available
+    # devices by make_enum_mesh; size-1 results resolve to None)
+    assert m._resolve_mesh(MatchOptions(engine="vector", mesh=1)) is None
+
+
+def test_resolve_mesh_auto_small_query_stays_single_device():
+    """fig1 has a dozen vertices — orders of magnitude under the row
+    floor, so mesh="auto" must resolve to no mesh even on a multi-device
+    host."""
+    data, query = fig1_pair()
+    m = Matcher(Dataset.from_graph(data))
+    opts = MatchOptions(engine="vector", mesh="auto")
+    assert m._resolve_mesh(opts, total_rows=12) is None
+    res = m.count(query, opts)
+    assert res.stats.shard_lanes == 0
+
+
+@needs_devices
+def test_resolve_mesh_auto_oversubscribed_container():
+    """Forced 4 XLA host devices on this container's CPU: whatever the
+    workload size claims, auto must not pick a 4-lane mesh when the real
+    core count cannot back the lanes (the BENCH_shard dblp regression)."""
+    data, _ = fig1_pair()
+    m = Matcher(Dataset.from_graph(data))
+    opts = MatchOptions(engine="vector", mesh="auto")
+    if (os.cpu_count() or 1) <= jax.local_device_count():
+        assert m._resolve_mesh(opts, total_rows=BIG) is None
+    else:  # pragma: no cover - beefy host: large workloads may shard
+        mesh = m._resolve_mesh(opts, total_rows=BIG)
+        assert mesh is None or mesh.devices.size == jax.local_device_count()
+
+
+@needs_devices
+def test_resolve_mesh_explicit_int_still_shards():
+    """Explicit mesh=4 is a user override, not subject to the cost
+    model — the sharded differentials rely on it to force the path."""
+    data, query = fig1_pair()
+    m = Matcher(Dataset.from_graph(data))
+    mesh = m._resolve_mesh(MatchOptions(engine="vector", mesh=4))
+    assert mesh is not None and mesh.devices.size == 4
+
+
+def test_auto_counts_match_explicit_paths():
+    """Whatever auto resolves to, counts are identical to both forced
+    paths — the cost model is a pure perf decision."""
+    data, query = fig1_pair()
+    m = Matcher(Dataset.from_graph(data))
+    base = dict(engine="vector", tile_rows=16, limit=10**9)
+    auto = m.count(query, MatchOptions(mesh="auto", **base))
+    seq = m.count(query, MatchOptions(**base))
+    assert auto.count == seq.count
+    if MULTI:
+        shd = m.count(query, MatchOptions(mesh=4, **base))
+        assert auto.count == shd.count

@@ -194,3 +194,36 @@ def test_intersect_mode_validation():
     query = random_walk_query(data, 3, seed=1)
     with pytest.raises(ValueError):
         vector_match(query, data, intersect="nope")
+
+
+# ------------------------------------------------------- overlap accounting
+def test_readback_accounting_under_overlap():
+    """One device_steps per dispatch must still hold under overlap, and the
+    deferred readbacks obey readbacks <= supersteps with every superstep
+    accounted for: readbacks + overlapped_supersteps == supersteps.
+    (Regression: the pre-overlap accounting assumed one readback per
+    superstep, so coalescing would have silently undercounted syncs.)"""
+    data = synthetic_labeled_graph(80, 6.0, 2, seed=1, power_law=False)
+    query = random_walk_query(data, 6, seed=8)
+    for overlap in (True, False):
+        res = vector_match(query, data, limit=10**9, tile_rows=16,
+                           overlap=overlap)
+        st = res.stats
+        assert st.device_steps == st.supersteps + st.packed_tiles
+        assert 0 < st.readbacks <= st.supersteps
+        assert st.readbacks + st.overlapped_supersteps == st.supersteps
+        if not overlap:
+            # the synchronous path syncs every dispatch individually
+            assert st.readbacks == st.supersteps
+            assert st.overlapped_supersteps == 0
+
+
+def test_compat_loop_has_no_readback_counters():
+    """The stage-at-a-time compat loop (use_cer_buffer=False) predates the
+    fused superstep readback protocol; its overlap counters stay zero."""
+    data = synthetic_labeled_graph(60, 5.0, 2, seed=3, power_law=False)
+    query = random_walk_query(data, 5, seed=13)
+    res = vector_match(query, data, limit=10**9, tile_rows=32,
+                       use_cer_buffer=False)
+    assert res.stats.readbacks == 0
+    assert res.stats.overlapped_supersteps == 0

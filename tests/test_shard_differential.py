@@ -64,7 +64,7 @@ def test_sharded_fig1_matches_sequential_and_ref(tile_rows):
     m = Matcher(Dataset.from_graph(data))
     opts = MatchOptions(engine="vector", tile_rows=tile_rows, limit=10**9)
     seq = m.count(query, opts)
-    shd = m.count(query, opts, mesh="auto")
+    shd = m.count(query, opts, mesh=4)
     ref = m.count(query, opts, engine="ref")
     assert seq.count == shd.count == ref.count
 
@@ -78,7 +78,7 @@ def test_sharded_random_pairs_match_sequential_and_ref(seed):
     m = Matcher(Dataset.from_graph(data))
     opts = MatchOptions(engine="vector", limit=10**9)
     seq = m.count(query, opts)
-    shd = m.count(query, opts, mesh="auto")
+    shd = m.count(query, opts, mesh=4)
     ref = m.count(query, opts, engine="ref")
     assert seq.count == shd.count == ref.count
 
@@ -92,7 +92,7 @@ def test_sharded_workload_matches_sequential(tile_rows, encoding):
     opts = MatchOptions(engine="vector", tile_rows=tile_rows, limit=10**9,
                         encoding=encoding)
     seq = [m.count(q, opts) for q in queries]
-    shd = [m.count(q, opts, mesh="auto") for q in queries]
+    shd = [m.count(q, opts, mesh=4) for q in queries]
     assert _counts(seq) == _counts(shd)
     # real sharded dispatches happened somewhere in the workload
     assert any(o.stats.shard_lanes > 0 for o in shd)
@@ -105,7 +105,7 @@ def test_sharded_superbatch_matches_sequential_and_ref():
     opts = MatchOptions(engine="vector", tile_rows=32, limit=10**9)
     seq = m.match_many(queries, opts, batch="off")
     bat = m.match_many(queries, opts, batch="auto")
-    shd = m.match_many(queries, opts, batch="auto", mesh="auto")
+    shd = m.match_many(queries, opts, batch="auto", mesh=4)
     assert _counts(seq) == _counts(bat) == _counts(shd)
     ref = [m.count(q, opts, engine="ref").count for q in queries]
     assert ref == _counts(shd)
@@ -120,7 +120,7 @@ def test_sharded_limit_clamps_identically():
     opts = MatchOptions(engine="vector", tile_rows=16, limit=50,
                         encoding="all_black", order=(0, 1, 2))
     seq = m.count(query, opts)
-    shd = m.count(query, opts, mesh="auto")
+    shd = m.count(query, opts, mesh=4)
     assert seq.count == shd.count == 50
 
 
@@ -131,7 +131,7 @@ def test_sharded_stream_materializes_same_embeddings():
     seq = sorted(tuple(sorted(e.items()))
                  for e in m.stream(query, engine="vector"))
     shd = sorted(tuple(sorted(e.items()))
-                 for e in m.stream(query, engine="vector", mesh="auto"))
+                 for e in m.stream(query, engine="vector", mesh=4))
     assert seq == shd and len(seq) > 0
 
 
@@ -165,12 +165,12 @@ def test_more_shards_than_root_candidates():
     m = Matcher(Dataset.from_graph(data))
     opts = MatchOptions(engine="vector", tile_rows=16, limit=10**9)
     seq = m.count(query, opts)
-    shd = m.count(query, opts, mesh="auto")
+    shd = m.count(query, opts, mesh=4)
     assert seq.count == shd.count
 
 
 @needs_devices
-@pytest.mark.parametrize("mesh", ["auto", 2, 3])
+@pytest.mark.parametrize("mesh", [4, 2, 3])
 def test_contained_vertex_prune_is_global_across_shards(mesh):
     """Regression: a same-label triangle on a 6-clique has a root
     contained-vertex threshold of 2, and with 4 shards two partitions
@@ -203,7 +203,7 @@ def test_rebalance_triggers_on_skewed_star():
     opts = MatchOptions(engine="vector", tile_rows=16, limit=10**9,
                         encoding="all_black", order=(0, 1, 2))
     seq = m.count(query, opts)
-    shd = m.count(query, opts, mesh="auto")
+    shd = m.count(query, opts, mesh=4)
     assert seq.count == shd.count
     assert shd.stats.shard_rebalances > 0
     assert shd.stats.supersteps < seq.stats.supersteps
@@ -219,10 +219,10 @@ def test_sharded_leaf_overflow_falls_back_exact(monkeypatch):
     query = random_walk_query(data, 5, seed=12)
     opts = MatchOptions(engine="vector", tile_rows=64, limit=10**9)
     base = Matcher(Dataset.from_graph(data)).count(query, opts,
-                                                   mesh="auto").count
+                                                   mesh=4).count
     monkeypatch.setattr(sched, "OVERFLOW_LIMIT", 0.5)
     forced = Matcher(Dataset.from_graph(data)).count(query, opts,
-                                                     mesh="auto")
+                                                     mesh=4)
     assert forced.count == base
     assert forced.stats.leaf_overflows > 0
 
